@@ -1,0 +1,47 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import activations as acts
+from repro.core import federated, predict_labels
+from repro.data import partition, synthetic
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+# paper Table 1 datasets, scaled for the CPU container (scale recorded in
+# every CSV; the structural claims are scale-independent)
+DATASETS = ["susy", "hepmass", "higgs", "higgsx4"]
+DEFAULT_SCALE = float(os.environ.get("BENCH_SCALE", "2e-3"))
+CLIENTS_GRID = [1, 4, 20, 100, 400, 1000]
+
+
+def load(name: str, scale: float = None, seed: int = 0):
+    scale = DEFAULT_SCALE if scale is None else scale
+    X, y = synthetic.generate(name, scale=scale, seed=seed)
+    return synthetic.train_test_split(X, y, 0.7, seed)
+
+
+def fed_accuracy(parts, Xte, yte, n_classes=2, lam=1e-3):
+    W = federated.fed_fit(
+        [p[0] for p in parts],
+        [acts.encode_labels(p[1], n_classes) for p in parts],
+        act="logistic", lam=lam)
+    pred = predict_labels(W, Xte, act="logistic")
+    return float((np.asarray(pred) == yte).mean()), W
+
+
+def write_csv(name: str, header, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"[bench] wrote {path} ({len(rows)} rows)")
+    return path

@@ -1,0 +1,37 @@
+"""Paper Fig. 3/5: sum of CPU time and Wh vs #clients (+ the analytic
+crossover prediction from the energy model — beyond-paper)."""
+from __future__ import annotations
+
+from repro.core import activations as acts
+from repro.core import federated
+from repro.data import partition
+from repro.energy import predict_crossover, watt_hours
+
+from . import common
+
+
+def run(scale=None, clients=None, partitioner="iid"):
+    clients = clients or common.CLIENTS_GRID
+    rows = []
+    for ds in common.DATASETS:
+        (Xtr, ytr), _ = common.load(ds, scale)
+        m = Xtr.shape[1]
+        for P in clients:
+            P_eff = min(P, len(ytr) // 2)
+            parts = partition.partition(partitioner, Xtr, ytr, P_eff)
+            tf = federated.fed_fit_timed(
+                [p[0] for p in parts],
+                [acts.encode_labels(p[1], 2) for p in parts],
+                act="logistic")
+            rows.append([ds, P_eff, round(tf.cpu_time, 4),
+                         round(watt_hours(tf.cpu_time), 6)])
+        rows.append([ds, "predicted_crossover_clients",
+                     predict_crossover(len(ytr), m), ""])
+    return common.write_csv(
+        f"fig3_energy_{partitioner}.csv",
+        ["dataset", "clients", "sum_cpu_time_s", "watt_hours"],
+        rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Kernel micro-bench: the client hot loop (gram_stats) reference path
+timing + analytic TPU roofline of the kernel's tiling.
+
+interpret-mode Pallas timings are not hardware-representative; what we
+record is (a) the jnp reference wall time on this host, (b) the kernel's
+analytic VMEM/MXU utilization on the v5e target (bytes per tile vs VMEM,
+FLOPs per byte streamed).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.roofline import HW
+
+from . import common
+
+
+def run():
+    rows = []
+    for n, m in [(100_000, 29), (100_000, 128), (20_000, 512)]:
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n,)), jnp.float32)
+        db = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        f = jax.jit(ref.gram_stats_ref)
+        jax.block_until_ready(f(X, fp, db))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(f(X, fp, db))
+        us = (time.perf_counter() - t0) / 3 * 1e6
+
+        # analytic kernel roofline on v5e (bm=128, bn=512 tiles)
+        bm, bn = 128, 512
+        flops = 2.0 * n * m * m + 4.0 * n * m
+        bytes_streamed = 4.0 * n * m          # X read once (fused moment)
+        ai = flops / bytes_streamed           # arithmetic intensity
+        t_mxu = flops / HW["peak_flops_bf16"]
+        t_hbm = bytes_streamed / HW["hbm_bw"]
+        bound = "compute" if t_mxu > t_hbm else "memory"
+        vmem_tile_kb = (2 * bn * bm + bm * bm + 2 * bn) * 4 / 1024
+        rows.append(["gram_stats", f"{n}x{m}", round(us, 1),
+                     round(ai, 2), bound, round(vmem_tile_kb, 1)])
+    return common.write_csv(
+        "kernel_bench.csv",
+        ["kernel", "shape", "ref_us_per_call", "arith_intensity",
+         "v5e_bound", "vmem_tile_kb"], rows)
+
+
+if __name__ == "__main__":
+    run()

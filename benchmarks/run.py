@@ -1,0 +1,46 @@
+"""Benchmark driver: one benchmark per paper figure/table, plus the
+kernel micro-bench and the roofline-table assembler.
+
+``PYTHONPATH=src python -m benchmarks.run [--scale 2e-3] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None,
+                    help="dataset scale factor (default env BENCH_SCALE "
+                         "or 2e-3)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small client grid")
+    args = ap.parse_args()
+
+    from . import (fig2_clients_iid, fig3_energy, fig4_noniid,
+                   kernel_bench, roofline_table, table3_accuracy)
+    from . import common
+    if args.quick:
+        common.CLIENTS_GRID = [1, 10, 100]
+
+    t0 = time.time()
+    print("== Fig 2: accuracy/time vs clients (IID) ==")
+    fig2_clients_iid.run(args.scale)
+    print("== Fig 3: energy vs clients (IID) ==")
+    fig3_energy.run(args.scale)
+    print("== Fig 4/5: non-IID scenario ==")
+    fig4_noniid.run(args.scale)
+    print("== Table 3: accuracy comparison vs baselines ==")
+    table3_accuracy.run(args.scale)
+    print("== Kernel micro-bench ==")
+    kernel_bench.run()
+    print("== Roofline table (from dry-run artifacts) ==")
+    roofline_table.run()
+    print(f"[bench] all done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

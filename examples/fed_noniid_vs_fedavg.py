@@ -1,0 +1,35 @@
+"""The paper's headline: single-round analytic FL is immune to non-IID
+data, while iterative averaging degrades and needs many rounds.
+
+    PYTHONPATH=src python examples/fed_noniid_vs_fedavg.py
+"""
+import numpy as np
+
+from repro.baselines import accuracy, fedavg, scaffold
+from repro.core import activations as acts
+from repro.core import fed_fit, predict_labels
+from repro.data import partition, synthetic
+
+X, y = synthetic.generate("susy", scale=2e-3, seed=1)
+(Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
+P = 50
+
+for scenario, parts in [
+    ("IID", partition.iid(Xtr, ytr, P)),
+    ("pathological non-IID", partition.pathological(Xtr, ytr, P)),
+    ("Dirichlet(0.1)", partition.dirichlet(Xtr, ytr, P, alpha=0.1)),
+]:
+    W = fed_fit([p[0] for p in parts],
+                [acts.encode_labels(p[1], 2) for p in parts],
+                act="logistic")
+    acc_ours = float((np.asarray(predict_labels(W, Xte, act="logistic"))
+                      == yte).mean())
+    acc_fa1 = accuracy(fedavg(parts, 2, rounds=1, local_steps=10),
+                       Xte, yte)
+    acc_fa20 = accuracy(fedavg(parts, 2, rounds=20, local_steps=10),
+                        Xte, yte)
+    acc_sc = accuracy(scaffold(parts, 2, rounds=20, local_steps=10),
+                      Xte, yte)
+    print(f"{scenario:22s}  ours(1 round) {acc_ours:.4f} | "
+          f"FedAvg(1) {acc_fa1:.4f} | FedAvg(20) {acc_fa20:.4f} | "
+          f"SCAFFOLD(20) {acc_sc:.4f}")

@@ -1,0 +1,65 @@
+"""The paper's technique as a building block for deep models (its stated
+future work): FedHead — a one-round federated analytic readout on top of
+a frozen transformer backbone.
+
+Ten clients hold disjoint non-IID shards of a sequence-classification
+task. Each featurizes locally with the shared frozen SmolLM backbone,
+publishes only (U_p S_p, m_p), and the coordinator produces a head that is
+exactly the centralized ridge/logistic readout.
+
+    PYTHONPATH=src python examples/fedhead_backbone.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import activations as acts
+from repro.core import centralized_solve_gram, head, predict_labels
+from repro.models import build_model
+
+# frozen backbone (reduced config on CPU)
+cfg = configs.get("smollm-135m", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# synthetic sequence classification: class k sequences are biased toward a
+# token range — linearly separable in feature space, non-trivial in tokens
+rng = np.random.default_rng(0)
+n, seq, n_classes = 600, 32, 4
+y = rng.integers(0, n_classes, size=n)
+base = (y[:, None] * (cfg.vocab // n_classes))
+tokens = (base + rng.integers(0, cfg.vocab // n_classes, size=(n, seq))
+          ).astype(np.int32)
+
+feats = np.asarray(head.featurize(
+    lambda p, b: model.hidden(p, b), params,
+    {"tokens": jnp.asarray(tokens)}, pool="mean"), np.float32)
+
+# 10 label-sorted (non-IID) clients
+order = np.argsort(y, kind="stable")
+shards = np.array_split(order, 10)
+tr = np.concatenate([s[: int(len(s) * 0.8)] for s in shards])
+te = np.concatenate([s[int(len(s) * 0.8):] for s in shards])
+
+parts_f = [feats[s[: int(len(s) * 0.8)]] for s in shards]
+parts_d = [np.asarray(acts.encode_labels(y[s[: int(len(s) * 0.8)]],
+                                         n_classes)) for s in shards]
+
+W = head.fedhead_fit(parts_f, parts_d, act="logistic", lam=1e-2)
+pred = predict_labels(W, feats[te], act="logistic")
+acc = float((np.asarray(pred) == y[te]).mean())
+
+W_c = centralized_solve_gram(feats[tr],
+                             acts.encode_labels(y[tr], n_classes),
+                             act="logistic", lam=1e-2)
+pred_c = predict_labels(W_c, feats[te], act="logistic")
+acc_c = float((np.asarray(pred_c) == y[te]).mean())
+
+print(f"FedHead (1 round, 10 non-IID clients, frozen backbone): "
+      f"acc = {acc:.4f}")
+print(f"centralized analytic head:                              "
+      f"acc = {acc_c:.4f}")
+print(f"max |W_fed - W_central| = "
+      f"{float(np.abs(np.asarray(W) - np.asarray(W_c)).max()):.2e}")
+assert acc > 1.5 / n_classes, "well above chance"

@@ -1,0 +1,27 @@
+"""Serving example: batched prefill + autoregressive decode with KV cache
+across three architecture families (dense, SSM, hybrid).
+
+    PYTHONPATH=src python examples/serve_generate.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import generate
+
+for name in ["smollm-135m", "mamba2-2.7b", "jamba-v0.1-52b"]:
+    cfg = configs.get(name, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, size=(2, 16)),
+        jnp.int32)
+    toks, cache = generate(model, params, {"tokens": prompt},
+                           steps=12, max_len=40)
+    assert toks.shape == (2, 12)
+    assert bool(jnp.isfinite(toks).all())
+    print(f"{name:16s} generated {toks.shape[1]} tokens/seq, "
+          f"cache len {int(cache['len'])}: {np.asarray(toks[0])[:8]}")
+print("serving OK across dense / ssm / hybrid")

@@ -1,0 +1,57 @@
+"""End-to-end backbone training driver: a SmolLM-family model trained for
+a few hundred steps on the synthetic token pipeline, loss verified to
+decrease, checkpoint saved and restored.
+
+Default runs the reduced config on CPU; ``--full`` selects the real
+135M-parameter config (sized for the production mesh).
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 200
+"""
+import argparse
+import os
+import tempfile
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data.pipeline import TokenStream
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+cfg = configs.get("smollm-135m", smoke=not args.full)
+model = build_model(cfg)
+state = init_train_state(model, jax.random.PRNGKey(0))
+step_fn = jax.jit(make_train_step(model, peak_lr=1e-3, warmup=20,
+                                  total=args.steps))
+n = sum(p.size for p in jax.tree.leaves(state.params))
+print(f"training {cfg.name} ({n/1e6:.1f}M params) for {args.steps} steps")
+
+stream = iter(TokenStream(cfg.vocab, args.seq, args.batch, seed=0))
+losses = []
+for step in range(args.steps):
+    batch = {k: jax.numpy.asarray(v) for k, v in next(stream).items()}
+    state, metrics = step_fn(state, batch)
+    losses.append(float(metrics["loss"]))
+    if step % 20 == 0 or step == args.steps - 1:
+        print(f"  step {step:4d}  loss {losses[-1]:.4f}")
+
+first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+print(f"loss {first:.4f} → {last:.4f}")
+assert last < first, "loss must decrease"
+
+with tempfile.TemporaryDirectory() as d:
+    path = save_checkpoint(os.path.join(d, "ckpt.npz"), state.params)
+    restored = load_checkpoint(path, state.params)
+    ok = all(np.allclose(a, b) for a, b in
+             zip(jax.tree.leaves(state.params), jax.tree.leaves(restored)))
+    print(f"checkpoint round-trip: {'OK' if ok else 'MISMATCH'}")
+    assert ok

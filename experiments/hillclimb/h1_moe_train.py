@@ -1,0 +1,59 @@
+"""H1 — worst roofline fraction: olmoe-1b-7b × train_4k.
+
+Baseline (scan-dispatch MoE) shows useful-FLOPs ratio ≈ 0.003: the group
+scan's dispatch/compute replicates across the data axes (each scan
+iteration all-gathers its token group), wasting 16× compute.
+
+Iterations:
+  iter1: vectorized group dispatch (moe_vectorized=True) — groups become a
+         sharded batch dim (G on data, E on model). Hypothesis: per-device
+         FLOPs ↓ ~16×, collective bytes shift from per-iteration gathers
+         to one buffer reshard.
+  iter2: capacity_factor 1.25 → 1.0 on top — compute ∝ cf.
+  iter3: larger groups (fewer, bigger) via the vectorized path is implicit;
+         instead test top_k-renormalized router in bf16 — router math is
+         negligible; expected <5% (refutation check).
+
+Run: PYTHONPATH=src python experiments/hillclimb/h1_moe_train.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../../src"))
+
+from repro.launch.dryrun import lower_combo  # noqa: E402
+
+
+def main():
+    results = []
+    for tag, overrides in [
+        ("baseline_scan_dispatch", None),
+        ("iter1_vectorized_groups", {"moe_vectorized": True}),
+        ("iter2_vectorized_cf1.0", {"moe_vectorized": True,
+                                    "capacity_factor": 1.0}),
+    ]:
+        r = lower_combo("olmoe-1b-7b", "train_4k", cfg_overrides=overrides,
+                        verbose=False)
+        row = {"tag": tag,
+               "t_compute_s": r["t_compute_s"],
+               "t_memory_s": r["t_memory_s"],
+               "t_collective_s": r["t_collective_s"],
+               "dominant": r["dominant"],
+               "useful_flops_ratio": r["useful_flops_ratio"],
+               "peak_gb": (r["memory"].get("peak_bytes") or 0) / 1e9}
+        results.append(row)
+        print(f"[h1] {tag:26s} compute {row['t_compute_s']:9.3f}s "
+              f"memory {row['t_memory_s']:9.3f}s coll "
+              f"{row['t_collective_s']:7.3f}s useful "
+              f"{row['useful_flops_ratio']:.4f} "
+              f"peak {row['peak_gb']:.2f}GB → {row['dominant']}")
+    out = os.path.join(os.path.dirname(__file__), "h1_results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[h1] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""H2 — serving memory/collective: command-r-35b × decode_32k.
+
+Baseline: kv=8 heads < 16-way model axis ⇒ the KV cache replicates across
+the model axis: 687 GB global KV / 16 (data) = 43 GB per device. Decode is
+KV-bandwidth-bound, so this is both a capacity failure (>16 GB HBM) and a
+16× memory-traffic waste.
+
+Iterations:
+  iter1: shard the KV head_dim (128 % 16 == 0) across the model axis.
+         Hypothesis: per-device KV 43 GB → 2.7 GB; the q·k contraction
+         over hd becomes partial ⇒ one all-reduce of (b/16, hkv, 1, s)
+         f32 scores per layer ≈ 8·8·32768·4 B = 8.4 MB — tiny vs the
+         40 GB of reads saved. memory term ↓ ~16×, collective term ↑ ε.
+  iter2: shard the KV sequence dim instead. Hypothesis: same capacity win;
+         XLA must either distribute the online-softmax (it cannot) or
+         all-gather KV per step — expect collective blow-up ⇒ refuted.
+
+Run: PYTHONPATH=src python experiments/hillclimb/h2_decode_kv.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../../src"))
+
+from repro.launch.dryrun import _CACHE_RULES, lower_combo  # noqa: E402
+
+KV_HD_SHARDED = [
+    (r"/(k|v|ck|cv)$", (None, "batch", None, None, "heads")),  # hd on model
+] + _CACHE_RULES[1:]
+
+KV_SEQ_SHARDED = [
+    (r"/(k|v|ck|cv)$", (None, "batch", "seq", None, None)),
+] + _CACHE_RULES[1:]
+
+
+def main():
+    results = []
+    for tag, cache_rules, rules in [
+        ("baseline_kv_replicated", None, None),
+        ("iter1_kv_headdim_sharded", KV_HD_SHARDED, None),
+        ("iter2_kv_seq_sharded", KV_SEQ_SHARDED, {"seq": ("model",)}),
+    ]:
+        r = lower_combo("command-r-35b", "decode_32k",
+                        cache_rules=cache_rules, rules_overrides=rules,
+                        verbose=False)
+        row = {"tag": tag,
+               "t_compute_s": r["t_compute_s"],
+               "t_memory_s": r["t_memory_s"],
+               "t_collective_s": r["t_collective_s"],
+               "dominant": r["dominant"],
+               "peak_gb": (r["memory"].get("peak_bytes") or 0) / 1e9,
+               "collectives": {k: v for k, v in r["collectives"].items()
+                               if v["count"]}}
+        results.append(row)
+        print(f"[h2] {tag:26s} memory {row['t_memory_s']:.4f}s coll "
+              f"{row['t_collective_s']:.4f}s peak {row['peak_gb']:.2f}GB "
+              f"→ {row['dominant']}")
+    out = os.path.join(os.path.dirname(__file__), "h2_results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[h2] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

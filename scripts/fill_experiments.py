@@ -1,0 +1,52 @@
+"""Regenerate the roofline tables inside EXPERIMENTS.md from the dry-run
+JSON artifacts. Idempotent: replaces the content between the table
+markers.
+
+    PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline_table import load_results, markdown_table  # noqa
+
+
+def fill(text, marker, content):
+    start = text.index(marker)
+    end = text.index("\n", start)
+    return text[:start] + content + text[end + 1:] if False else \
+        text.replace(marker, content)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for tag, marker in [("pod", "TABLE_PLACEHOLDER_POD"),
+                        ("multipod", "TABLE_PLACEHOLDER_MULTIPOD")]:
+        rows = load_results("experiments/dryrun", tag)
+        if not rows:
+            continue
+        n_run = sum(1 for r in rows if "skipped" not in r)
+        n_skip = len(rows) - n_run
+        title = {"pod": "### Single-pod 16×16 (256 chips)",
+                 "multipod": "### Multi-pod 2×16×16 (512 chips)"}[tag]
+        content = (f"{title} — {n_run} combos compiled, {n_skip} "
+                   f"documented skips\n\n" + markdown_table(rows))
+        if marker in text:
+            text = text.replace(marker, content)
+        else:
+            # re-fill: replace between title and next "###"/"##"
+            start = text.index(title)
+            nxt = min(x for x in
+                      (text.find("\n### ", start + 1),
+                       text.find("\n## ", start + 1))
+                      if x != -1)
+            text = text[:start] + content + text[nxt:]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

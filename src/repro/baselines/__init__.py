@@ -1,0 +1,2 @@
+from .iterative import (fedavg, scaffold, sgd_logreg_centralized,
+                        accuracy)

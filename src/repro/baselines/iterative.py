@@ -1,0 +1,106 @@
+"""Iterative FL baselines on the same one-layer model class.
+
+The paper's related work contrasts its single-round analytic method with
+multi-round FedAvg [McMahan17] and SCAFFOLD [Karimireddy20]; we implement
+both (logistic regression = one-layer network with logistic output) so
+Table-3-style comparisons use *our own measured baselines* rather than
+quoted numbers (the UCI datasets are offline — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _add_bias(X):
+    return jnp.concatenate([jnp.ones((X.shape[0], 1), X.dtype), X], axis=1)
+
+
+@jax.jit
+def _grad(W, X, Y):
+    """Mean logistic cross-entropy gradient. X has bias col; Y (n,c) 0/1."""
+    logits = X @ W
+    p = jax.nn.sigmoid(logits)
+    return X.T @ (p - Y) / X.shape[0]
+
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _local_sgd(W, X, Y, lr, steps):
+    def body(w, _):
+        return w - lr * _grad(w, X, Y), None
+    return jax.lax.scan(body, W, None, length=steps)[0]
+
+
+def _prep_parts(parts, c):
+    out = []
+    for X, y in parts:
+        Xb = _add_bias(jnp.asarray(X, jnp.float32))
+        Y = jnp.eye(c, dtype=jnp.float32)[np.asarray(y)]
+        out.append((Xb, Y))
+    return out
+
+
+def fedavg(parts: Sequence[Tuple], n_classes: int, *, rounds: int = 20,
+           local_steps: int = 10, lr: float = 0.5,
+           seed: int = 0) -> jnp.ndarray:
+    """FedAvg on logistic regression. Returns W ((m+1), c)."""
+    data = _prep_parts(parts, n_classes)
+    m = data[0][0].shape[1]
+    W = jnp.zeros((m, n_classes), jnp.float32)
+    sizes = np.array([X.shape[0] for X, _ in data], np.float64)
+    weights = sizes / sizes.sum()
+    for _ in range(rounds):
+        locals_ = [_local_sgd(W, X, Y, lr, local_steps) for X, Y in data]
+        W = sum(w * jnp.asarray(wt, jnp.float32)
+                for w, wt in zip(locals_, weights))
+    return W
+
+
+def scaffold(parts: Sequence[Tuple], n_classes: int, *, rounds: int = 20,
+             local_steps: int = 10, lr: float = 0.5) -> jnp.ndarray:
+    """SCAFFOLD with full participation (control variates fix client
+    drift; the paper cites it as the non-IID state of the art)."""
+    data = _prep_parts(parts, n_classes)
+    m = data[0][0].shape[1]
+    P = len(data)
+    W = jnp.zeros((m, n_classes), jnp.float32)
+    c_glob = jnp.zeros_like(W)
+    c_loc = [jnp.zeros_like(W) for _ in range(P)]
+
+    @jax.jit
+    def local(W, X, Y, cg, ci):  # local_steps/lr closed over (static)
+        def body(w, _):
+            return w - lr * (_grad(w, X, Y) - ci + cg), None
+        y = jax.lax.scan(body, W, None, length=local_steps)[0]
+        ci_new = ci - cg + (W - y) / (local_steps * lr)
+        return y, ci_new
+
+    for _ in range(rounds):
+        dws, dcs = [], []
+        for p, (X, Y) in enumerate(data):
+            y_p, ci_new = local(W, X, Y, c_glob, c_loc[p])
+            dws.append(y_p - W)
+            dcs.append(ci_new - c_loc[p])
+            c_loc[p] = ci_new
+        W = W + sum(dws) / P
+        c_glob = c_glob + sum(dcs) / P
+    return W
+
+
+def sgd_logreg_centralized(X, y, n_classes: int, *, steps: int = 200,
+                           lr: float = 0.5) -> jnp.ndarray:
+    Xb = _add_bias(jnp.asarray(X, jnp.float32))
+    Y = jnp.eye(n_classes, dtype=jnp.float32)[np.asarray(y)]
+    W = jnp.zeros((Xb.shape[1], n_classes), jnp.float32)
+    return _local_sgd(W, Xb, Y, lr, steps)
+
+
+def accuracy(W, X, y) -> float:
+    logits = _add_bias(jnp.asarray(X, jnp.float32)) @ W
+    pred = jnp.argmax(logits, axis=1)
+    return float((np.asarray(pred) == np.asarray(y)).mean())

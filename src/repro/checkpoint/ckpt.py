@@ -1,0 +1,55 @@
+"""Flat-npz checkpointing (orbax not in env).
+
+Pytrees are flattened to path-keyed arrays; restore rebuilds against a
+template tree (shape/dtype-checked). Device-sharded arrays are gathered to
+host before save; on restore the caller re-shards via device_put with its
+own NamedShardings (the launcher does this).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":   # npz cannot encode bf16
+            arr = arr.astype(np.float32)   # lossless widening
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(path: str, template) -> Any:
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files if k != "__step__"}
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for pth, leaf in leaves_with_path:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in pth)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

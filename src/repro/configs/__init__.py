@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from . import (command_r_35b, dbrx_132b, deepseek_67b, jamba_v01_52b,
+               mamba2_2p7b, nemotron_4_340b, olmoe_1b_7b, pixtral_12b,
+               smollm_135m, whisper_small)
+from .base import INPUT_SHAPES, ArchConfig, InputShape
+
+_MODULES = {
+    "whisper-small": whisper_small,
+    "command-r-35b": command_r_35b,
+    "pixtral-12b": pixtral_12b,
+    "deepseek-67b": deepseek_67b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "nemotron-4-340b": nemotron_4_340b,
+    "mamba2-2.7b": mamba2_2p7b,
+    "dbrx-132b": dbrx_132b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "smollm-135m": smollm_135m,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+REGISTRY = {name: mod.CONFIG for name, mod in _MODULES.items()}
+REGISTRY["smollm-135m-swa"] = smollm_135m.CONFIG_SWA
+
+SMOKE_REGISTRY = {name: mod.SMOKE for name, mod in _MODULES.items()}
+SMOKE_REGISTRY["smollm-135m-swa"] = smollm_135m.SMOKE_SWA
+
+
+def get(name: str, smoke: bool = False) -> ArchConfig:
+    reg = SMOKE_REGISTRY if smoke else REGISTRY
+    try:
+        return reg[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(reg)}") from None
+
+
+def get_shape(name: str) -> InputShape:
+    try:
+        return INPUT_SHAPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown input shape {name!r}; have {sorted(INPUT_SHAPES)}"
+        ) from None

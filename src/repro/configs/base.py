@@ -1,0 +1,132 @@
+"""Architecture config schema + the input-shape table.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG`` (exact sizes from the assignment, source cited) and
+``SMOKE`` (reduced same-family variant: ≤2 layers, d_model ≤ 512,
+≤4 experts) for CPU smoke tests. ``repro.configs.get(name)`` resolves both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                    # 0 for attention-free
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    modality: str = "text"          # text | audio | vlm
+    mlp: str = "swiglu"             # swiglu | relu2 | gelu
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    pos: str = "rope"               # rope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    parallel_block: bool = False    # command-r style attn ∥ ffn
+    qkv_bias: bool = False
+    qk_norm: bool = False           # RMSNorm on q/k head vectors (OLMoE)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1              # MoE replaces MLP every k-th layer
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    # hybrid (attention interleave)
+    attn_every: int = 0             # jamba: 1 attention layer per 8
+    attn_offset: int = 4
+    # encoder-decoder / modality stubs
+    encoder_layers: int = 0
+    encoder_len: int = 0            # stub audio frames
+    num_image_tokens: int = 0       # stub vision patches
+    # attention variants
+    sliding_window: int = 0         # 0 = full causal
+    source: str = ""
+    # cost-model support: python-loop the layer stack instead of lax.scan
+    # (XLA cost_analysis counts while-loop bodies once; the dry-run lowers
+    # tiny unrolled variants to extrapolate true per-layer cost)
+    unroll_layers: bool = False
+    # MoE dispatch: scan over token groups (False, default) or one
+    # vectorized batched-group dispatch with the group dim sharded over the
+    # data axes (True — §Perf H-MoE optimization; beyond-paper)
+    moe_vectorized: bool = False
+    # expert-parallel shard_map dispatch (all-to-all over the model axis;
+    # §Perf H1 optimization) — falls back to the pjit path when no mesh
+    # rules are active or shapes don't divide
+    moe_ep: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic decode path exists (DESIGN.md §5)."""
+        return (self.arch_type in ("ssm", "hybrid")
+                or self.sliding_window > 0)
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'ssm' mixer for layer i (hybrid interleave)."""
+        if self.arch_type == "ssm":
+            return "ssm"
+        if self.arch_type == "hybrid" and self.attn_every:
+            return "attn" if i % self.attn_every == self.attn_offset else "ssm"
+        return "attn"
+
+    def ffn_kind(self, i: int) -> str:
+        """'moe' | 'mlp' | 'none' for layer i."""
+        if self.d_ff == 0:
+            return "none"   # pure-SSM blocks (mamba2) have no FFN sublayer
+        if self.n_experts and i % self.moe_every == self.moe_offset:
+            return "moe"
+        return "mlp"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        from repro.models import model as _m
+        return _m.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import model as _m
+        return _m.param_count(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,17 @@
+"""command-r-35b [dense] — GQA, no-bias, parallel attn∥ffn block
+[hf:CohereForAI/c4ai-command-r-v01]."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-35b", arch_type="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv=8, d_ff=22528, vocab=256000,
+    mlp="swiglu", norm="layernorm", pos="rope", rope_theta=8_000_000.0,
+    parallel_block=True, tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=256, n_heads=8, n_kv=2, d_ff=512, vocab=512,
+)

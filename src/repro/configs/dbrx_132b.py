@@ -1,0 +1,18 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained MoE every layer
+[hf:databricks/dbrx-base]."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", arch_type="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv=8, d_ff=10752, vocab=100352,
+    n_experts=16, top_k=4, moe_every=1,
+    mlp="swiglu", norm="layernorm", pos="rope", rope_theta=500_000.0,
+    source="hf:databricks/dbrx-base",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv=2, d_ff=256, vocab=512,
+    n_experts=4, top_k=2,
+)

@@ -1,0 +1,15 @@
+"""deepseek-67b [dense] — llama-arch, GQA kv=8 [arXiv:2401.02954]."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", arch_type="dense",
+    n_layers=95, d_model=8192, n_heads=64, n_kv=8, d_ff=22016, vocab=102400,
+    mlp="swiglu", norm="rmsnorm", pos="rope",
+    source="arXiv:2401.02954",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=256, n_heads=8, n_kv=2, d_ff=512, vocab=512,
+)

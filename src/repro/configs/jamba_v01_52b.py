@@ -1,0 +1,28 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE every 2nd
+layer, 16 experts top-2 [arXiv:2403.19887].
+
+Layer i: attention mixer iff i % 8 == 4 (4 attn layers of 32), SSM
+otherwise; MoE FFN iff i % 2 == 1. Jamba v0.1 uses Mamba-1 mixers with
+state 16; we implement the SSD (Mamba-2) formulation of the same
+selective-SSM family — a TPU-idiomatic adaptation (chunked scan maps to
+MXU matmuls), noted in DESIGN.md.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", arch_type="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_ff=14336, vocab=65536,
+    n_experts=16, top_k=2, moe_every=2, moe_offset=1,
+    attn_every=8, attn_offset=4,
+    ssm_state=16, ssm_conv=4, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+    mlp="swiglu", norm="rmsnorm", pos="none",
+    source="arXiv:2403.19887",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=128, n_heads=4, n_kv=2, d_ff=256, vocab=512,
+    n_experts=4, top_k=2, attn_every=2, attn_offset=1,
+    ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+)

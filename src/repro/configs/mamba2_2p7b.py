@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm] — attention-free SSD (state-space duality)
+[arXiv:2405.21060]. d_inner = 2·2560 = 5120, 80 heads × head_dim 64,
+state 128.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", arch_type="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv=0, d_ff=0, vocab=50280,
+    ssm_state=128, ssm_conv=4, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+    norm="rmsnorm", pos="none",
+    source="arXiv:2405.21060",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, ssm_state=16, ssm_head_dim=32,
+    vocab=512, ssm_chunk=32,
+)

@@ -1,0 +1,18 @@
+"""nemotron-4-340b [dense] — GQA kv=8, squared-ReLU MLP [arXiv:2402.16819].
+
+head_dim = 18432/96 = 192.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b", arch_type="dense",
+    n_layers=96, d_model=18432, n_heads=96, n_kv=8, d_ff=73728, vocab=256000,
+    mlp="relu2", norm="layernorm", pos="rope",
+    source="arXiv:2402.16819",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=256, n_heads=8, n_kv=2, d_ff=1024, vocab=512,
+)

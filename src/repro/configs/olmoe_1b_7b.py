@@ -1,0 +1,17 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, MoE every layer [arXiv:2409.02060]."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", arch_type="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv=16, d_ff=1024, vocab=50304,
+    n_experts=64, top_k=8, moe_every=1,
+    mlp="swiglu", norm="rmsnorm", pos="rope", qk_norm=True,
+    source="arXiv:2409.02060",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv=4, d_ff=64, vocab=512,
+    n_experts=4, top_k=2,
+)

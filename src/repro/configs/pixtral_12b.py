@@ -1,0 +1,18 @@
+"""pixtral-12b [vlm] — pixtral-ViT (stubbed) + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409]. head_dim=128 explicit (Nemo style)."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", arch_type="dense", modality="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv=8, d_ff=14336, vocab=131072,
+    head_dim=128, num_image_tokens=256,
+    mlp="swiglu", norm="rmsnorm", pos="rope", rope_theta=1_000_000.0,
+    source="hf:mistralai/Pixtral-12B-2409",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=256, n_heads=8, n_kv=2, d_ff=512, vocab=512,
+    head_dim=32, num_image_tokens=16,
+)

@@ -1,0 +1,27 @@
+"""smollm-135m [dense] — llama-arch small [hf:HuggingFaceTB/SmolLM-135M].
+
+``smollm-135m-swa`` is our sliding-window variant (window 4096) — the
+dense-architecture sub-quadratic decode path for long_500k (DESIGN.md §5).
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m", arch_type="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv=3, d_ff=1536, vocab=49152,
+    mlp="swiglu", norm="rmsnorm", pos="rope", tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)
+
+CONFIG_SWA = dataclasses.replace(
+    CONFIG, name="smollm-135m-swa", sliding_window=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=192, n_heads=3, n_kv=1, d_ff=512, vocab=512,
+)
+
+SMOKE_SWA = dataclasses.replace(
+    SMOKE, name="smollm-135m-swa", sliding_window=16,
+)

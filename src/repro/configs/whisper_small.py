@@ -1,0 +1,17 @@
+"""whisper-small [audio] — enc-dec, conv frontend stubbed [arXiv:2212.04356]."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", arch_type="dense", modality="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv=12, d_ff=3072, vocab=51865,
+    encoder_layers=12, encoder_len=1500,
+    mlp="gelu", norm="layernorm", pos="sinusoidal", qkv_bias=True,
+    source="arXiv:2212.04356",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, encoder_layers=2, d_model=128, n_heads=4, n_kv=4,
+    d_ff=256, vocab=512, encoder_len=32,
+)

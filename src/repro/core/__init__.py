@@ -1,0 +1,16 @@
+"""Paper core: single-round analytic federated learning for one-layer NNs."""
+from . import activations, federated, head, sharded, solver
+from .federated import FedONNClient, FedONNCoordinator, fed_fit, fed_fit_timed
+from .solver import (ClientStats, GramStats, centralized_solve_gram,
+                     client_gram_stats, client_stats, merge_gram, merge_many,
+                     merge_stats, predict, predict_labels, solve_weights,
+                     solve_weights_gram)
+
+__all__ = [
+    "activations", "federated", "head", "sharded", "solver",
+    "FedONNClient", "FedONNCoordinator", "fed_fit", "fed_fit_timed",
+    "ClientStats", "GramStats", "centralized_solve_gram",
+    "client_gram_stats", "client_stats", "merge_gram", "merge_many",
+    "merge_stats", "predict", "predict_labels", "solve_weights",
+    "solve_weights_gram",
+]

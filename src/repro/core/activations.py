@@ -1,0 +1,78 @@
+"""Invertible output activations for the one-layer analytic solver.
+
+The paper's objective (eq. 2) is the MSE measured *before* the output
+nonlinearity, so the solver needs, for an activation ``f``:
+
+  * ``f``        — forward, used only at inference time,
+  * ``f_inv``    — to map desired outputs ``d`` to pre-activation targets
+                   ``d̄ = f⁻¹(d)``,
+  * ``f_prime``  — ``f'`` evaluated at the pre-activation ``d̄`` to build
+                   the diagonal weighting ``F = diag(f'(d̄))``.
+
+Only invertible activations qualify (the paper uses the logistic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation:
+    name: str
+    f: Callable[[jnp.ndarray], jnp.ndarray]
+    f_inv: Callable[[jnp.ndarray], jnp.ndarray]
+    f_prime: Callable[[jnp.ndarray], jnp.ndarray]  # df/dz at pre-activation z
+
+
+def _logistic(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def _logistic_inv(d, eps=1e-7):
+    d = jnp.clip(d, eps, 1.0 - eps)
+    return jnp.log(d / (1.0 - d))
+
+
+def _logistic_prime(z):
+    s = _logistic(z)
+    return s * (1.0 - s)
+
+
+def _tanh_inv(d, eps=1e-7):
+    return jnp.arctanh(jnp.clip(d, -1.0 + eps, 1.0 - eps))
+
+
+LOGISTIC = Activation("logistic", _logistic, _logistic_inv, _logistic_prime)
+TANH = Activation("tanh", jnp.tanh, _tanh_inv, lambda z: 1.0 - jnp.tanh(z) ** 2)
+IDENTITY = Activation(
+    "identity", lambda z: z, lambda d: d, lambda z: jnp.ones_like(z)
+)
+
+_REGISTRY = {a.name: a for a in (LOGISTIC, TANH, IDENTITY)}
+# alias: "linear" == identity (ridge-regression fast path, shared F)
+_REGISTRY["linear"] = IDENTITY
+
+
+def get(name_or_act) -> Activation:
+    if isinstance(name_or_act, Activation):
+        return name_or_act
+    try:
+        return _REGISTRY[name_or_act]
+    except KeyError:
+        raise ValueError(
+            f"unknown activation {name_or_act!r}; have {sorted(_REGISTRY)}"
+        ) from None
+
+
+def encode_labels(y: jnp.ndarray, n_classes: int, low: float = 0.05,
+                  high: float = 0.95) -> jnp.ndarray:
+    """One-hot encode integer labels into the open activation range.
+
+    The logistic inverse is undefined at {0,1}; the standard trick (and what
+    the reference FedHEONN code does) is to use soft targets inside (0, 1).
+    """
+    onehot = jnp.eye(n_classes, dtype=jnp.float32)[y]
+    return onehot * (high - low) + low

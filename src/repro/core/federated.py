@@ -1,0 +1,128 @@
+"""Client/coordinator orchestration (paper Algorithms 1 & 2).
+
+This module is the *simulated-federation* driver used by benchmarks and
+examples: P in-process clients, one coordinator, one round. The
+mesh-distributed version (clients mapped onto devices with collectives as
+transport) lives in ``core/sharded.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import solver
+from .solver import ClientStats
+
+
+@dataclasses.dataclass
+class FedONNClient:
+    """A federated participant holding a local data partition (Alg. 1)."""
+    X: jnp.ndarray                  # (n_p, m_in)
+    d: jnp.ndarray                  # (n_p,) int labels or (n_p, c) targets
+    act: str = "logistic"
+
+    def compute(self) -> ClientStats:
+        return solver.client_stats(self.X, self.d, self.act)
+
+
+class FedONNCoordinator:
+    """Aggregation server (Alg. 2) with incremental client admission.
+
+    ``add`` may be called at any time — a client that was offline during the
+    first aggregation can be merged later without retraining anyone (paper
+    §3.2, "the coordinator could add clients at different stages").
+    """
+
+    def __init__(self, lam: float = 1e-3):
+        self.lam = lam
+        self._agg: Optional[ClientStats] = None
+        self.rounds = 0  # stays at 1 for any number of clients — the claim
+
+    def add(self, stats: ClientStats) -> None:
+        if self._agg is None:
+            self._agg = stats
+        else:
+            self._agg = solver.merge_stats(self._agg, stats)
+
+    def add_many(self, stats_list: Sequence[ClientStats],
+                 tree: bool = True) -> None:
+        """Aggregate a batch of client uploads.
+
+        ``tree=True`` merges pairwise in log-depth (what a real coordinator
+        pool would do); ``tree=False`` follows Alg. 2 literally
+        (sequential). Both give the same model — tested.
+        """
+        items = list(stats_list)
+        if self._agg is not None:
+            items = [self._agg] + items
+        if tree:
+            while len(items) > 1:
+                nxt = [solver.merge_stats(items[i], items[i + 1])
+                       for i in range(0, len(items) - 1, 2)]
+                if len(items) % 2:
+                    nxt.append(items[-1])
+                items = nxt
+            self._agg = items[0]
+        else:
+            agg = items[0]
+            for st in items[1:]:
+                agg = solver.merge_stats(agg, st)
+            self._agg = agg
+        self.rounds = 1
+
+    def solve(self) -> jnp.ndarray:
+        if self._agg is None:
+            raise RuntimeError("no client statistics aggregated yet")
+        return solver.solve_weights(self._agg, self.lam)
+
+
+def fed_fit(parts_X: Sequence, parts_d: Sequence, act: str = "logistic",
+            lam: float = 1e-3, tree: bool = True) -> jnp.ndarray:
+    """End-to-end single-round federated fit over P client partitions."""
+    coord = FedONNCoordinator(lam=lam)
+    stats = [FedONNClient(X, d, act).compute() for X, d in
+             zip(parts_X, parts_d)]
+    coord.add_many(stats, tree=tree)
+    return coord.solve()
+
+
+@dataclasses.dataclass
+class TimedFit:
+    """fed_fit with the paper's timing model (§4.1 metrics).
+
+    * ``train_time``  = slowest client + coordinator (real FL wall time),
+    * ``cpu_time``    = Σ client times + coordinator (energy proxy),
+    """
+    W: jnp.ndarray
+    client_times: List[float]
+    coordinator_time: float
+
+    @property
+    def train_time(self) -> float:
+        return max(self.client_times) + self.coordinator_time
+
+    @property
+    def cpu_time(self) -> float:
+        return sum(self.client_times) + self.coordinator_time
+
+
+def fed_fit_timed(parts_X, parts_d, act="logistic", lam=1e-3,
+                  tree=True) -> TimedFit:
+    stats, times = [], []
+    for X, d in zip(parts_X, parts_d):
+        t0 = time.perf_counter()
+        st = FedONNClient(X, d, act).compute()
+        jax.block_until_ready(st.U)
+        times.append(time.perf_counter() - t0)
+        stats.append(st)
+    coord = FedONNCoordinator(lam=lam)
+    t0 = time.perf_counter()
+    coord.add_many(stats, tree=tree)
+    W = coord.solve()
+    jax.block_until_ready(W)
+    t_coord = time.perf_counter() - t0
+    return TimedFit(W=W, client_times=times, coordinator_time=t_coord)

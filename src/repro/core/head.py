@@ -1,0 +1,68 @@
+"""FedHead — the paper's technique as an analytic readout for deep backbones.
+
+The paper closes with: *"we consider the possibility of ... using the
+proposed method as a building block for more efficient deeper models."*
+FedHead is that building block: given a frozen backbone (any architecture
+in ``repro/configs``), each client featurizes its local data with the
+shared backbone and runs the paper's one-round analytic solve on
+(features, targets). No backbone gradients, one communication round,
+exactly-centralized-equivalent head.
+
+For large output counts (LM vocab) the identity activation is used so the
+weighting F = I is shared across outputs: one SVD per client serves all
+``c`` outputs (distributed ridge regression — still eq. 5 verbatim).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import activations as acts
+from . import federated, sharded, solver
+
+
+def featurize(apply_fn: Callable, params, batch, *,
+              pool: str = "last") -> jnp.ndarray:
+    """Run the frozen backbone; return (n, d_model) features.
+
+    ``apply_fn(params, batch) -> (b, s, d_model)`` hidden states.
+    ``pool``: 'last' (final position), 'mean', or 'tokens' (flatten b·s —
+    per-token targets, e.g. next-token readout).
+    """
+    h = apply_fn(params, batch)
+    if pool == "last":
+        return h[:, -1, :]
+    if pool == "mean":
+        return h.mean(axis=1)
+    if pool == "tokens":
+        return h.reshape(-1, h.shape[-1])
+    raise ValueError(f"unknown pool {pool!r}")
+
+
+def fedhead_fit(features_parts: Sequence[jnp.ndarray],
+                target_parts: Sequence[jnp.ndarray],
+                act: str = "identity", lam: float = 1e-3) -> jnp.ndarray:
+    """One-round federated analytic head over per-client feature blocks."""
+    return federated.fed_fit(features_parts, target_parts, act=act, lam=lam)
+
+
+def fedhead_fit_sharded(features: jnp.ndarray, targets: jnp.ndarray,
+                        act: str = "identity", lam: float = 1e-3, *,
+                        mesh: Mesh, axis: str = "data",
+                        wire: str = "svd") -> jnp.ndarray:
+    """Mesh-distributed FedHead (clients = data-axis shards).
+
+    ``wire='svd'`` uses the paper's factor upload; ``wire='gram'`` the
+    beyond-paper psum format (see core/sharded.py).
+    """
+    fit = (sharded.fed_fit_sharded if wire == "svd"
+           else sharded.fed_fit_sharded_gram)
+    return fit(features, targets, act=act, lam=lam, mesh=mesh, axis=axis)
+
+
+def head_predict(W: jnp.ndarray, features: jnp.ndarray,
+                 act: str = "identity") -> jnp.ndarray:
+    return solver.predict(W, features, act=act)

@@ -1,0 +1,111 @@
+"""Mesh-distributed single-round federation via shard_map.
+
+The paper's transport (clients upload ``U_p S_p`` and ``m_p`` over a
+network) maps onto a TPU mesh as: clients live on an axis of the mesh
+(one client partition per device), the upload is an ``all_gather`` over
+that axis, and the coordinator's incremental SVD merge becomes a one-shot
+Iwen–Ong merge computed redundantly (replicated) on every device. One FL
+round == one collective phase.
+
+Two wire formats, mathematically equivalent:
+
+* ``fed_fit_sharded``      — the paper's eq.-5/eq.-6 representation:
+  all_gather of (k, m, r) factors then wide SVD. Communication
+  O(P·k·m·r) per device.
+* ``fed_fit_sharded_gram`` — beyond-paper eq.-3 representation: psum of
+  the (k, m, m) Gram. Communication O(k·m²) and a cheaper reduce
+  (ring all-reduce) instead of gather+SVD. Better whenever m < P·r;
+  slightly worse conditioning (κ² of the Gram). See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import solver
+
+
+def _local_stats(X, D, act):
+    # no bias-row trick needed to change: bias column is data-parallel safe
+    return solver.client_stats(X, D, act=act, add_bias=True)
+
+
+def fed_fit_sharded(X, D, act="logistic", lam: float = 1e-3, *,
+                    mesh: Mesh, axis: str = "data") -> jnp.ndarray:
+    """Single-round federated fit; clients sharded over ``axis`` on ``n``.
+
+    Returns the replicated global weight matrix (m, c) — identical (up to
+    fp rounding) to the centralized solve, which is the paper's core claim.
+    """
+    def shard_fn(Xs, Ds):
+        st = _local_stats(Xs, Ds, act)
+        # "upload": gather every client's factors and moment vector
+        US = jax.lax.all_gather(st.US, axis)           # (Pₐ, k, m, r)
+        m_vec = jax.lax.psum(st.m_vec, axis)           # Σ m_p (eq. 10)
+        Pn, k, m, r = US.shape
+        wide = jnp.moveaxis(US, 0, -2).reshape(k, m, Pn * r)
+        U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
+        rr = min(m, Pn * r)
+        merged = solver.ClientStats(U=U[..., :rr], s=s[..., :rr],
+                                    m_vec=m_vec,
+                                    n=jax.lax.psum(st.n, axis))
+        return solver.solve_weights(merged, lam)
+
+    fn = jax.shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis, None)),
+                       out_specs=P(None, None), check_vma=False)
+    return fn(jnp.asarray(X), _as_2d(D))
+
+
+def fed_fit_sharded_gram(X, D, act="logistic", lam: float = 1e-3, *,
+                         mesh: Mesh, axis: str = "data") -> jnp.ndarray:
+    """Beyond-paper wire format: psum the eq.-3 Gram stats instead."""
+    def shard_fn(Xs, Ds):
+        st = solver.client_gram_stats(Xs, Ds, act=act, add_bias=True)
+        G = jax.lax.psum(st.G, axis)
+        m_vec = jax.lax.psum(st.m_vec, axis)
+        n = jax.lax.psum(st.n, axis)
+        return solver.solve_weights_gram(
+            solver.GramStats(G=G, m_vec=m_vec, n=n), lam)
+
+    fn = jax.shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis, None)),
+                       out_specs=P(None, None), check_vma=False)
+    return fn(jnp.asarray(X), _as_2d(D))
+
+
+def _as_2d(D):
+    D = jnp.asarray(D)
+    return D[:, None] if D.ndim == 1 else D
+
+
+def choose_wire(P: int, m: int, r: int) -> str:
+    """Pick the cheaper federation wire format by interconnect transit.
+
+    Paper (svd) wire: all_gather of (m, r) factors — ring transit per
+    device ≈ P·m·r elements. Gram wire: all_reduce of the (m, m) Gram —
+    transit ≈ 2·m². The svd wire wins only when clients are rank-deficient
+    enough (r ≪ m) and few (P·r < 2m). See EXPERIMENTS.md §Perf H3.
+    """
+    return "svd" if P * r < 2 * m else "gram"
+
+
+def fed_fit_sharded_auto(X, D, act="logistic", lam: float = 1e-3, *,
+                         mesh: Mesh, axis: str = "data") -> jnp.ndarray:
+    """fed_fit_sharded with the wire format chosen by transit cost."""
+    P_ = mesh.shape[axis]
+    n_local = X.shape[0] // P_
+    m = X.shape[1] + 1  # bias
+    r = min(m, n_local)
+    fit = fed_fit_sharded if choose_wire(P_, m, r) == "svd" \
+        else fed_fit_sharded_gram
+    return fit(X, D, act=act, lam=lam, mesh=mesh, axis=axis)
+
+
+def make_client_mesh(n_clients_axis: int | None = None) -> Mesh:
+    """A 1-D mesh over all local devices for simulated-client sharding."""
+    n = n_clients_axis or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

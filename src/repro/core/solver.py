@@ -1,0 +1,200 @@
+"""Closed-form one-layer solver — the paper's §3 in JAX.
+
+Terminology follows the paper with a samples-first public API:
+``X`` is ``(n, m_in)`` (we transpose internally to the paper's ``m×n`` and
+prepend the bias row), ``D`` is ``(n, c)`` desired outputs inside the
+activation range.
+
+Two mathematically equivalent paths are provided:
+
+* **SVD path (eq. 5)** — the paper's federated representation. Client
+  statistics are ``(U_k, s_k)`` from the economy SVD of ``X F_k`` (one per
+  output ``k``, because ``F = diag(f'(d̄_{:,k}))`` differs per output) and
+  ``m = X F F d̄``. Stats merge associatively via Iwen & Ong (eq. 6).
+* **Gram path (eq. 3)** — ``(X F F Xᵀ + λI) w = X F F d̄`` solved directly.
+  Used as the centralized oracle in tests, and as a beyond-paper
+  lower-communication federated variant (clients publish the ``m×m`` Gram
+  instead of ``m×r`` factors; merge is a plain sum / psum).
+
+The identity activation gets a fast path: ``F = I`` is shared across
+outputs, so one SVD serves any number of outputs (this is what makes the
+method usable as an analytic large-vocab readout, see ``core/head.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import activations as acts
+
+
+class ClientStats(NamedTuple):
+    """Sufficient statistics a client publishes (paper Alg. 1 outputs).
+
+    ``U``: (k, m, r) left singular vectors of X F_k, ``s``: (k, r) singular
+    values, ``m_vec``: (m, c) moment vector. ``k == c`` for per-output F
+    (nonlinear activations) or ``k == 1`` for the shared-F identity path.
+    ``n``: scalar sample count (used only for bookkeeping/energy model).
+    """
+    U: jnp.ndarray
+    s: jnp.ndarray
+    m_vec: jnp.ndarray
+    n: jnp.ndarray
+
+    @property
+    def US(self) -> jnp.ndarray:  # (k, m, r) — what the paper's client sends
+        return self.U * self.s[..., None, :]
+
+
+def _add_bias(X: jnp.ndarray) -> jnp.ndarray:
+    ones = jnp.ones((X.shape[0], 1), dtype=X.dtype)
+    return jnp.concatenate([ones, X], axis=1)
+
+
+def _prep(X, D, act, add_bias, dtype):
+    act = acts.get(act)
+    X = jnp.asarray(X, dtype)
+    D = jnp.asarray(D, dtype)
+    if D.ndim == 1:
+        D = D[:, None]
+    if add_bias:
+        X = _add_bias(X)
+    d_bar = act.f_inv(D)          # (n, c) pre-activation targets
+    fp = act.f_prime(d_bar)       # (n, c) diagonal of F per output
+    return X, d_bar, fp, act
+
+
+def client_stats(X, D, act="logistic", add_bias: bool = True,
+                 dtype=jnp.float32) -> ClientStats:
+    """Paper Algorithm 1: the client's local computation."""
+    X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
+    m_vec = X.T @ (fp * fp * d_bar)                    # (m, c), eq. 7-9
+    if act.name == "identity":
+        # F = I shared across outputs: single economy SVD.
+        U, s, _ = jnp.linalg.svd(X.T, full_matrices=False)  # (m, r), (r,)
+        U, s = U[None], s[None]                             # k = 1
+    else:
+        # per-output F_k: batched SVD of (c, m, n)
+        A = jnp.einsum("nm,nc->cmn", X, fp)
+        U, s, _ = jnp.linalg.svd(A, full_matrices=False)
+    return ClientStats(U=U, s=s, m_vec=m_vec,
+                       n=jnp.asarray(X.shape[0], dtype))
+
+
+def merge_stats(a: ClientStats, b: ClientStats) -> ClientStats:
+    """Iwen & Ong incremental SVD merge (paper eq. 6 / Alg. 2 line 6).
+
+    ``SVD([A|B])`` has the same U, s as ``SVD([U_a S_a | U_b S_b])``.
+    Associative and commutative up to sign/rounding, which is what lets the
+    coordinator add clients in any order or incrementally.
+    """
+    wide = jnp.concatenate([a.US, b.US], axis=-1)      # (k, m, ra+rb)
+    U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
+    m = a.U.shape[-2]
+    r = min(m, wide.shape[-1])
+    return ClientStats(U=U[..., :r], s=s[..., :r],
+                       m_vec=a.m_vec + b.m_vec, n=a.n + b.n)
+
+
+def merge_many(stats_list) -> ClientStats:
+    """One-shot Iwen–Ong merge of P partials: SVD([U₁S₁|…|U_P S_P]).
+
+    Equivalent to any sequence of pairwise merges but a single wide SVD;
+    this is the form the mesh-sharded solver uses after all_gather.
+    """
+    wide = jnp.concatenate([st.US for st in stats_list], axis=-1)
+    U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
+    m = wide.shape[-2]
+    r = min(m, wide.shape[-1])
+    m_vec = sum(st.m_vec for st in stats_list)
+    n = sum(st.n for st in stats_list)
+    return ClientStats(U=U[..., :r], s=s[..., :r], m_vec=m_vec, n=n)
+
+
+def solve_weights(stats: ClientStats, lam: float = 1e-3) -> jnp.ndarray:
+    """Paper eq. 5 / Alg. 2 line 8: W = U (SSᵀ + λI)⁻¹ Uᵀ m. → (m, c)."""
+    U, s, m_vec = stats.U, stats.s, stats.m_vec
+    k = U.shape[0]
+    gain = 1.0 / (s * s + lam)                         # (k, r)
+    if k == 1:
+        # shared F: solve all c outputs with the single factorization
+        return U[0] @ (gain[0, :, None] * (U[0].T @ m_vec))
+    proj = jnp.einsum("kmr,mk->kr", U, m_vec)          # Uₖᵀ m_{:,k}
+    return jnp.einsum("kmr,kr->mk", U, gain * proj)
+
+
+def centralized_solve_gram(X, D, act="logistic", lam: float = 1e-3,
+                           add_bias: bool = True,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle: direct eq. 3 solve on the full (centralized) dataset."""
+    X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
+    m_vec = X.T @ (fp * fp * d_bar)                    # (m, c)
+    m = X.shape[1]
+    eye = jnp.eye(m, dtype=dtype)
+
+    def solve_one(fp_k, m_k):
+        XF = X * fp_k[:, None]                         # (n, m)
+        G = XF.T @ XF                                  # X F F Xᵀ
+        return jnp.linalg.solve(G + lam * eye, m_k)
+
+    if act.name == "identity":
+        G = X.T @ X
+        return jnp.linalg.solve(G + lam * eye, m_vec)
+    return jax.vmap(solve_one, in_axes=(1, 1), out_axes=1)(fp, m_vec)
+
+
+class GramStats(NamedTuple):
+    """Beyond-paper federated representation: the eq.-3 sufficient stats.
+
+    ``G``: (k, m, m) per-output Gram ``X F_k F_k Xᵀ`` (k==1 when F shared),
+    ``m_vec``: (m, c). Merging is elementwise addition — on a mesh this is
+    a single psum instead of an all_gather + wide SVD (see core/sharded.py
+    and EXPERIMENTS.md §Perf for the communication comparison).
+    """
+    G: jnp.ndarray
+    m_vec: jnp.ndarray
+    n: jnp.ndarray
+
+
+def client_gram_stats(X, D, act="logistic", add_bias: bool = True,
+                      dtype=jnp.float32) -> GramStats:
+    X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
+    m_vec = X.T @ (fp * fp * d_bar)
+    if act.name == "identity":
+        G = (X.T @ X)[None]
+    else:
+        XF = jnp.einsum("nm,nc->cnm", X, fp)
+        G = jnp.einsum("cnm,cnp->cmp", XF, XF)
+    return GramStats(G=G, m_vec=m_vec, n=jnp.asarray(X.shape[0], dtype))
+
+
+def merge_gram(a: GramStats, b: GramStats) -> GramStats:
+    return GramStats(a.G + b.G, a.m_vec + b.m_vec, a.n + b.n)
+
+
+def solve_weights_gram(stats: GramStats, lam: float = 1e-3) -> jnp.ndarray:
+    G, m_vec = stats.G, stats.m_vec
+    m = G.shape[-1]
+    eye = jnp.eye(m, dtype=G.dtype)
+    if G.shape[0] == 1:
+        return jnp.linalg.solve(G[0] + lam * eye, m_vec)
+    sol = jax.vmap(lambda Gk, mk: jnp.linalg.solve(Gk + lam * eye, mk),
+                   in_axes=(0, 1), out_axes=1)(G, m_vec)
+    return sol
+
+
+def predict(W: jnp.ndarray, X, act="logistic", add_bias: bool = True):
+    act = acts.get(act)
+    X = jnp.asarray(X, W.dtype)
+    if add_bias:
+        X = _add_bias(X)
+    return act.f(X @ W)
+
+
+def predict_labels(W, X, act="logistic", add_bias: bool = True):
+    out = predict(W, X, act, add_bias)
+    if out.shape[1] == 1:  # binary, single output unit
+        return (out[:, 0] > 0.5).astype(jnp.int32)
+    return jnp.argmax(out, axis=1)

@@ -1,0 +1,49 @@
+"""Streaming / incremental clients (paper Fig. 1: "this process will be
+repeated each time new data arrives to the clients", and eq. 10's
+incremental moment update).
+
+A client does not need to hold its dataset: it folds each arriving chunk
+into its running (U, s, m) statistics via the same Iwen–Ong merge the
+coordinator uses — the merge is associative, so chunk-wise local merging
+followed by one upload is exactly equivalent to computing on the full
+local dataset (tested). Memory on the edge device stays O(m²) regardless
+of how much data streams through — the green/edge story of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from . import solver
+from .solver import ClientStats
+
+
+@dataclasses.dataclass
+class StreamingClient:
+    """Edge client that ingests data chunk by chunk."""
+    act: str = "logistic"
+    dtype: object = jnp.float32
+    _stats: Optional[ClientStats] = None
+    n_seen: int = 0
+
+    def ingest(self, X_chunk, d_chunk) -> None:
+        new = solver.client_stats(X_chunk, d_chunk, act=self.act,
+                                  dtype=self.dtype)
+        self._stats = new if self._stats is None else \
+            solver.merge_stats(self._stats, new)
+        self.n_seen += X_chunk.shape[0]
+
+    def upload(self) -> ClientStats:
+        if self._stats is None:
+            raise RuntimeError("no data ingested")
+        return self._stats
+
+    @property
+    def memory_floats(self) -> int:
+        """Footprint of the running statistics (the O(m·r) bound)."""
+        st = self._stats
+        if st is None:
+            return 0
+        return int(st.U.size + st.s.size + st.m_vec.size)

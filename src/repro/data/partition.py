@@ -1,0 +1,55 @@
+"""Client partitioners for the federated scenarios (paper §4.2/§4.3).
+
+* ``iid``          — shuffle, equal-size random shards (paper IID setup).
+* ``pathological`` — sort by label, deal sequentially: most clients see a
+  single class (paper's "pathological non-IID partition").
+* ``dirichlet``    — Dir(α) label-skew, the standard FL heterogeneity knob
+  (beyond-paper; lets benchmarks sweep heterogeneity continuously).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _chunk(idx: np.ndarray, P: int) -> List[np.ndarray]:
+    return [a for a in np.array_split(idx, P)]
+
+
+def iid(X, y, P: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(y))
+    return [(X[i], y[i]) for i in _chunk(idx, P)]
+
+
+def pathological(X, y, P: int, seed: int = 0):
+    order = np.argsort(y, kind="stable")
+    return [(X[i], y[i]) for i in _chunk(order, P)]
+
+
+def dirichlet(X, y, P: int, alpha: float = 0.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    shards: List[List[int]] = [[] for _ in range(P)]
+    for c in classes:
+        idx = rng.permutation(np.where(y == c)[0])
+        props = rng.dirichlet(np.full(P, alpha))
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for p, part in enumerate(np.split(idx, cuts)):
+            shards[p].extend(part.tolist())
+    out = []
+    for p in range(P):
+        i = np.array(sorted(shards[p]), dtype=int)
+        if len(i) == 0:  # Dirichlet can starve a client; give it one sample
+            i = np.array([rng.integers(len(y))])
+        out.append((X[i], y[i]))
+    return out
+
+
+PARTITIONERS = {"iid": iid, "pathological": pathological,
+                "dirichlet": dirichlet}
+
+
+def partition(name: str, X, y, P: int, **kw):
+    return PARTITIONERS[name](X, y, P, **kw)

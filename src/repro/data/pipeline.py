@@ -1,0 +1,66 @@
+"""Token / batch pipeline for backbone training and serving.
+
+Synthetic-but-structured streams (offline container): a Zipf-distributed
+token process with short-range repetition so that a language model has
+signal to fit (loss decreases), plus the modality stubs for the audio/VLM
+architectures (precomputed frame/patch embeddings — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(self.seed)
+        # Zipf over the vocab, renormalized (cheap approximation)
+        ranks = np.arange(1, min(self.vocab, 65536) + 1)
+        probs = ranks ** (-self.zipf_a)
+        probs /= probs.sum()
+        while True:
+            toks = rng.choice(len(probs), size=(self.batch, self.seq_len + 1),
+                              p=probs).astype(np.int32)
+            # short-range copy structure: token t repeats at t+Δ sometimes
+            rep = rng.random((self.batch, self.seq_len + 1)) < 0.3
+            toks[:, 8:] = np.where(rep[:, 8:], toks[:, :-8], toks[:, 8:])
+            yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_batch(arch_cfg, seq_len: int, batch: int, *, seed: int = 0,
+               np_dtype=np.float32) -> Dict[str, np.ndarray]:
+    """One host batch for an architecture, including modality stubs."""
+    rng = np.random.default_rng(seed)
+    vocab = arch_cfg.vocab
+    toks = rng.integers(0, vocab, size=(batch, seq_len + 1), dtype=np.int32)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if arch_cfg.modality == "audio":
+        out["encoder_embeds"] = rng.normal(
+            size=(batch, arch_cfg.encoder_len, arch_cfg.d_model)
+        ).astype(np_dtype)
+    elif arch_cfg.modality == "vlm":
+        out["image_embeds"] = rng.normal(
+            size=(batch, arch_cfg.num_image_tokens, arch_cfg.d_model)
+        ).astype(np_dtype)
+    return out
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh: Mesh,
+                batch_axes=("data",)) -> Dict[str, jax.Array]:
+    """Place a host batch onto the mesh, batch dim sharded over data axes."""
+    def put(x):
+        spec = P(batch_axes) if x.ndim >= 1 else P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return {k: put(v) for k, v in batch.items()}

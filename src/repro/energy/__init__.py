@@ -1,0 +1,2 @@
+from .meter import (DEVICE_WATTS, EnergyMeter, predict_crossover,
+                    watt_hours)

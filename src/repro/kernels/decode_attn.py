@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: flash-decode GQA attention.
+
+One new token (the decode_32k / long_500k serving hot loop) attends to a
+long KV cache. Grid = (batch, kv_head, kv_blocks); the KV sequence streams
+HBM→VMEM in (block_s × hd) tiles while the (group × hd) query tile and the
+online-softmax state (m, l, acc) stay resident in VMEM scratch. All the
+query heads of one GQA group share the streamed KV tile — the kernel reads
+each cache byte exactly once (the decode roofline is KV-bandwidth-bound,
+so bytes-read is the metric that matters).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, block_s: int, scale: float):
+    s_blk = pl.program_id(2)
+    n_blk = pl.num_programs(2)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = s_blk * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    valid = pos < kvlen_ref[0]
+    s = jnp.where(valid, s, NEG_INF)                   # (group, bs)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(s_blk == n_blk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "interpret"))
+def decode_gqa(q, k, v, kv_len, *, block_s: int = 512,
+               interpret: bool = False):
+    """q: (b, hq, hd); k, v: (b, S, hkv, hd); kv_len scalar int32.
+    Returns (b, hq, hd) float32."""
+    b, hq, hd = q.shape
+    S, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    Sp = -(-S // block_s) * block_s
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    kv_len = jnp.minimum(jnp.asarray(kv_len, jnp.int32), S).reshape(1)
+    n_blk = Sp // block_s
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=hd ** -0.5),
+        grid=(b, hkv, n_blk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, s: (0,)),
+            pl.BlockSpec((1, 1, group, hd), lambda ib, ih, s: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda ib, ih, s: (ib, s, ih, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda ib, ih, s: (ib, s, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda ib, ih, s: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qg, k, v)
+    return out.reshape(b, hq, hd)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused client-statistics accumulation.
+
+The paper's client hot loop (Alg. 1) streams the local dataset once and
+accumulates the eq.-3 sufficient statistics:
+
+    G    += (X F)ᵀ (X F)        (m × m Gram)
+    mvec += Xᵀ (fp² ⊙ d̄)        (m moment vector)
+
+TPU mapping (DESIGN.md §3): grid = (mi, mj, nk) with the sample axis nk
+innermost; each step loads two (bn × bm) tiles of X and a (bn × 1) tile of
+fp/d̄ into VMEM, scales, and feeds the MXU with a (bm × bn)·(bn × bm)
+contraction accumulated in the f32 VMEM output tile. Tile sizes are
+128-aligned for the MXU; the sample dimension streams HBM→VMEM so the
+working set stays at 3 tiles regardless of n (edge-device datasets stream
+at any size — the green-FL story on TPU).
+
+The moment vector reuses the already-resident X tile (j == 0 column of the
+grid), which is what "fused" buys over two separate passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_i_ref, x_j_ref, fp_ref, dbar_ref, g_ref, m_ref):
+    nk = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(nk == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    # the (i, 0) moment tile is revisited at every j with nk == 0 — only
+    # the j == 0 pass may initialize it, or later j passes would re-zero it
+    @pl.when((nk == 0) & (j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    fp = fp_ref[...].astype(jnp.float32)          # (bn, 1)
+    xi = x_i_ref[...].astype(jnp.float32)         # (bn, bm)
+    xj = x_j_ref[...].astype(jnp.float32)
+    xfi = xi * fp
+    xfj = xj * fp
+    # MXU contraction over the sample tile
+    g_ref[...] += jax.lax.dot_general(
+        xfi, xfj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _moment():
+        w = fp * fp * dbar_ref[...].astype(jnp.float32)   # (bn, 1)
+        m_ref[...] += jax.lax.dot_general(
+            xi, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gram_stats(X, fp, dbar, *, bm: int = 128, bn: int = 512,
+               interpret: bool = False):
+    """X: (n, m); fp, dbar: (n,) → (G (m, m), mvec (m,)) float32.
+
+    Pads n, m to tile multiples (zero rows/cols contribute nothing to
+    either statistic, so padding is exact).
+    """
+    n, m = X.shape
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    if (mp, np_) != (m, n):
+        X = jnp.pad(X, ((0, np_ - n), (0, mp - m)))
+        fp = jnp.pad(fp, (0, np_ - n))
+        dbar = jnp.pad(dbar, (0, np_ - n))
+    fp2 = fp[:, None]
+    dbar2 = dbar[:, None]
+    gi, gj, gk = mp // bm, mp // bm, np_ // bn
+
+    G, mvec = pl.pallas_call(
+        _kernel,
+        grid=(gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, X, fp2, dbar2)
+    return G[:m, :m], mvec[:m, 0]

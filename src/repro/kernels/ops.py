@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` (Pallas
+executes the kernel body in Python for correctness validation); on a TPU
+runtime, pass ``interpret=False`` (the default resolves by backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gram_stats as _gram
+from . import decode_attn as _dec
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def client_gram_stats_fused(X, D_bar, Fp, *, interpret=None):
+    """Multi-output fused client statistics via the Pallas kernel.
+
+    X: (n, m) with bias column; D_bar: (n, c) pre-activation targets;
+    Fp: (n, c) per-output diagonal of F. Returns (G (c, m, m), mvec (m, c)).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+
+    def one(fp_k, dbar_k):
+        return _gram.gram_stats(X, fp_k, dbar_k, interpret=interpret)
+
+    G, mv = jax.vmap(one, in_axes=(1, 1))(Fp, D_bar)
+    return G, mv.T
+
+
+def decode_gqa(q, k, v, kv_len, *, interpret=None, block_s: int = 512):
+    """Flash-decode GQA attention (one token vs a long KV cache)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dec.decode_gqa(q, k, v, kv_len, interpret=interpret,
+                           block_s=block_s)

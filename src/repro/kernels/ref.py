@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_stats_ref(X, fp, dbar):
+    """Fused client statistics (the paper's client hot loop, eq. 3/7).
+
+    X: (n, m) local data (bias column already appended),
+    fp: (n,) diagonal of F = f'(d̄), dbar: (n,) pre-activation targets.
+    Returns (G (m, m), mvec (m,)) in float32:
+      G    = (X·diag(fp))ᵀ (X·diag(fp)) = X F F Xᵀ   (paper's m×n layout)
+      mvec = Xᵀ (fp² ⊙ d̄)               = X F F d̄
+    """
+    Xf = X.astype(jnp.float32) * fp.astype(jnp.float32)[:, None]
+    G = Xf.T @ Xf
+    mvec = X.astype(jnp.float32).T @ (
+        fp.astype(jnp.float32) ** 2 * dbar.astype(jnp.float32))
+    return G, mvec
+
+
+def decode_gqa_ref(q, k, v, kv_len):
+    """Single-token GQA decode attention oracle.
+
+    q: (b, hq, hd); k, v: (b, S, hkv, hd); kv_len: scalar valid length.
+    """
+    b, hq, hd = q.shape
+    S, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kf) * (hd ** -0.5)
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, hd)

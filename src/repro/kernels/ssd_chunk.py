@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block.
+
+The chunked state-space-duality computation (models/ssm.py) spends its
+FLOPs in three per-chunk contractions — scores = (C·Bᵀ)⊙L, the masked
+"attention-like" product; Y_diag = scores·(x·dt); and the chunk state
+(B·decay)ᵀ·(x·dt). This kernel fuses all three over one VMEM residency of
+the chunk's tiles (the reference implementation reads x/B/C from HBM for
+each contraction).
+
+Grid = (batch·heads·chunks,); per step the (chunk × hd) x-tile,
+(chunk × n) B/C tiles and the (chunk,) dt vector live in VMEM; the decay
+matrix L = exp(segsum(dA)) is built in-register from a cumulative sum —
+O(chunk²) but fp32 elementwise, negligible next to the three MXU matmuls.
+Chunk=256, hd=64, n=128 ⇒ ~650 KB VMEM working set.
+
+The cheap inter-chunk recurrence (state carry across chunks) stays in JAX
+(`ssd_forward_pallas` below) — it is O(hd·n) per chunk and latency-, not
+throughput-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, dt_ref, B_ref, C_ref, a_ref,
+            y_ref, state_ref, decay_ref, dacum_ref, *, chunk: int):
+    x = x_ref[0].astype(jnp.float32)          # (chunk, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (chunk, 1)
+    Bm = B_ref[0].astype(jnp.float32)         # (chunk, n)
+    Cm = C_ref[0].astype(jnp.float32)
+    A = a_ref[0].astype(jnp.float32)          # (1,) negative scalar
+
+    dA = dt * A                               # (chunk, 1), ≤ 0
+    cums = jnp.cumsum(dA, axis=0)             # (chunk, 1)
+    # L[i, j] = exp(cums_i - cums_j) for j ≤ i (strict segment sum + diag)
+    diff = cums - cums[:, 0][None, :]         # (chunk, chunk)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.exp(jnp.where(mask, diff, NEG_INF))
+
+    xdt = x * dt                              # (chunk, hd)
+    scores = jax.lax.dot_general(             # C·Bᵀ  (chunk, chunk)
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot_general(                  # scores·(x·dt)
+        scores, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    decay_to_end = jnp.exp(cums[-1, 0] - cums)           # (chunk, 1)
+    state = jax.lax.dot_general(              # (B⊙decay)ᵀ·(x·dt) → (n, hd)
+        Bm * decay_to_end, xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    state_ref[0] = state.astype(state_ref.dtype)
+    decay_ref[0, 0] = jnp.exp(cums[-1, 0])
+    dacum_ref[0] = cums[:, 0].astype(dacum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, A, B, C, *, interpret: bool = False):
+    """Fused intra-chunk SSD terms.
+
+    x: (M, chunk, hd); dt: (M, chunk); A: (M,); B, C: (M, chunk, n) where
+    M = batch·heads·chunks (flattened grid).
+    Returns (y_diag (M, chunk, hd) f32, states (M, n, hd) f32,
+             chunk_decay (M,) f32, dA_cum (M, chunk) f32).
+    """
+    M, chunk, hd = x.shape
+    n = B.shape[-1]
+    y, state, decay, dacum = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, chunk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((M, n, hd), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, chunk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt[..., None], B, C, A)
+    return y, state, decay[:, 0], dacum
+
+
+def ssd_forward_pallas(x, dt, A, B, C, chunk: int, *,
+                       interpret: bool = True):
+    """Drop-in for models.ssm.ssd_forward with the intra-chunk math in the
+    Pallas kernel and the inter-chunk recurrence in JAX.
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, g, n).
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    # flatten (b, nc, h) → grid M; broadcast groups → heads
+    xc = x.reshape(b, nc, chunk, h, p).transpose(0, 1, 3, 2, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(0, 1, 3, 2)
+    Bh = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3) \
+        .transpose(0, 1, 3, 2, 4)
+    Ch = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3) \
+        .transpose(0, 1, 3, 2, 4)
+    M = b * nc * h
+    Am = jnp.tile(A[None, None, :], (b, nc, 1)).reshape(M)
+
+    y, states, decay, dacum = ssd_chunk(
+        xc.reshape(M, chunk, p), dtc.reshape(M, chunk),
+        Am, Bh.reshape(M, chunk, n), Ch.reshape(M, chunk, n),
+        interpret=interpret)
+
+    # unflatten; inter-chunk recurrence (JAX — latency-bound)
+    y = y.reshape(b, nc, h, chunk, p)
+    states = states.reshape(b, nc, h, n, p).transpose(0, 1, 2, 4, 3)
+    decay = decay.reshape(b, nc, h)
+    dacum = dacum.reshape(b, nc, h, chunk)
+
+    def inter(carry, inp):
+        st, dec = inp
+        new = st + carry * dec[..., None, None].astype(carry.dtype)
+        return new, carry
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev = jax.lax.scan(
+        inter, init, (states.transpose(1, 0, 2, 3, 4),
+                      decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)      # (b, nc, h, p, n)
+
+    state_decay = jnp.exp(dacum)              # (b, nc, h, chunk)
+    y_off = jnp.einsum("bzhcn,bzhpn->bzhcp",
+                       Ch.reshape(b, nc, h, chunk, n) *
+                       state_decay[..., None],
+                       prev)
+    out = (y + y_off).transpose(0, 1, 3, 2, 4).reshape(b, L, h, p)
+    return out[:, :l].astype(x.dtype), final_state

@@ -1,0 +1,56 @@
+"""Serving launcher: batched prefill + autoregressive decode.
+
+``PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke
+--steps 16`` runs a real prefill+decode loop on this host; on a TPU
+cluster the same entry point binds the production mesh with the sharding
+rules the decode dry-runs proved out (including the §Perf H2 KV layout).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import make_batch
+from repro.models import build_model
+from repro.serve import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=sorted(configs.REGISTRY))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, args.prompt_len, args.batch, seed=0).items()}
+    batch.pop("labels", None)
+    max_len = args.prompt_len + args.steps + \
+        (cfg.num_image_tokens if cfg.modality == "vlm" else 0)
+
+    t0 = time.time()
+    toks, cache = generate(model, params, batch, steps=args.steps,
+                           max_len=max_len)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    assert bool(jnp.isfinite(toks).all())
+    print(f"[serve] {cfg.name} ({'smoke' if args.smoke else 'full'}): "
+          f"{args.batch} seqs × ({args.prompt_len} prompt + {args.steps} "
+          f"generated) in {dt:.1f}s "
+          f"({args.batch * args.steps / dt:.1f} tok/s incl. compile)")
+    print(f"[serve] first sequence: {np.asarray(toks[0])[:16]} …")
+
+
+if __name__ == "__main__":
+    main()

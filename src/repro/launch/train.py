@@ -1,0 +1,69 @@
+"""Backbone training launcher.
+
+``PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke
+--steps 50`` runs a real training loop on this host (smoke config); on a
+TPU cluster the same entry point binds the production mesh and shards via
+the same rules the dry-run proved out.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.data.pipeline import make_batch
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=sorted(configs.REGISTRY))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, peak_lr=args.lr, warmup=20,
+                                      total=args.steps))
+    n_params = sum(p.size for p in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name} ({'smoke' if args.smoke else 'full'}): "
+          f"{n_params / 1e6:.1f}M params, {args.steps} steps "
+          f"@ batch {args.batch} × seq {args.seq}")
+
+    t0, losses = time.time(), []
+    for step in range(args.steps):
+        batch = make_batch(cfg, args.seq, args.batch, seed=step)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"  step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"ce {float(metrics['ce']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+    dt = time.time() - t0
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"[train] {dt:.1f}s ({dt / args.steps * 1e3:.0f} ms/step); "
+          f"loss {first:.4f} → {last:.4f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state.params, step=args.steps)
+        print(f"[train] checkpoint → {args.ckpt}")
+    if not last < first:
+        raise SystemExit("loss did not decrease")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import attention, encdec, layers, model, moe, ssm, transformer
+from .model import Model, build_model, param_count

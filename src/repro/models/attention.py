@@ -1,0 +1,198 @@
+"""GQA attention: chunked online-softmax (flash-style, pure JAX).
+
+One code path serves training, prefill and decode:
+
+* scores are never materialized beyond (…, q_block, kv_block) — the online
+  softmax scans over KV blocks, so 32k×32k prefill fits;
+* GQA via a (kv_heads, group) split of the query heads;
+* optional sliding window (ring-buffer KV handled at the cache level, mask
+  handled here);
+* ``q_offset`` positions decode queries against a longer KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shd
+from . import layers
+from .layers import cast, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, hq, hd), d),
+        "wk": dense_init(k2, (d, hkv, hd), d),
+        "wv": dense_init(k3, (d, hkv, hd), d),
+        "wo": dense_init(k4, (hq, hd, d), hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(x, p, cfg, positions=None, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"]))
+    if "bq" in p:
+        q = q + cast(p["bq"])
+        v = v + cast(p["bv"])
+    if "q_norm" in p:  # OLMoE-style QK-norm (per-head RMSNorm before RoPE)
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    if rope and cfg.pos == "rope" and positions is not None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def mha(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+        kv_len: Optional[jnp.ndarray] = None, block: int = 1024,
+        unroll: bool = False):
+    """Grouped attention with online softmax over KV blocks.
+
+    q: (b, sq, hq, hd); k, v: (b, skv, hkv, hd); hq % hkv == 0.
+    ``kv_len``: optional dynamic valid-length of the KV (decode caches).
+    ``unroll``: python-loop the KV blocks (dry-run cost model — XLA counts
+    scan bodies once); the block is enlarged to cap the unrolled length.
+    Returns (b, sq, hq, hd).
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    scale = hd ** -0.5
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    if unroll:
+        block = max(block, -(-skv // 8 // 128) * 128)
+    nblk = max(1, -(-skv // block))
+    pad = nblk * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, blk_idx = inp
+        k_pos = blk_idx * block + jnp.arange(block)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk) * scale
+        s = s.astype(jnp.float32)
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < skv if kv_len is None
+                 else k_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        pexp = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", pexp.astype(vblk.dtype), vblk)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, sq, hd), jnp.float32)
+
+    if nblk == 1:
+        (m, l, acc), _ = step((m0, l0, acc0),
+                              (kb[0], vb[0], jnp.asarray(0)))
+    elif unroll:
+        carry = (m0, l0, acc0)
+        for i in range(nblk):
+            carry, _ = step(carry, (kb[i], vb[i], jnp.asarray(i)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, acc0), (kb, vb, jnp.arange(nblk)))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention_block(x, p, cfg, *, causal=True, positions=None,
+                    block: int = 1024):
+    """Full self-attention sublayer (training / prefill, no cache)."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    q, k, v = _qkv(x, p, cfg, positions)
+    q = shd(q, "batch", None, "heads", None)
+    k = shd(k, "batch", None, "kv_heads", None)
+    v = shd(v, "batch", None, "kv_heads", None)
+    o = mha(q, k, v, causal=causal, window=cfg.sliding_window,
+        block=block, unroll=cfg.unroll_layers)
+    o = shd(o, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+
+
+# ------------------------------------------------------------- KV caching
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    """Stacked-per-layer KV cache. With a sliding window the buffer is a
+    ring of size window (sub-quadratic long-decode path)."""
+    buf = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (n_layers, batch, buf, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill_into_cache(cache_layer, k, v, window: int):
+    """Write prefill K/V (b, s, hkv, hd) into one layer's cache slot."""
+    buf = cache_layer["k"].shape[1]
+    s = k.shape[1]
+    if window and s > buf:
+        k, v = k[:, -buf:], v[:, -buf:]
+        s = buf
+    ck = jax.lax.dynamic_update_slice(
+        cache_layer["k"], k.astype(cache_layer["k"].dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_layer["v"], v.astype(cache_layer["v"].dtype), (0, 0, 0, 0))
+    return {"k": ck, "v": cv}
+
+
+def decode_attention(x, p, cfg, cache_k, cache_v, cache_len):
+    """One-token decode against a (possibly ring) KV cache.
+
+    x: (b, 1, d). cache_k/v: (b, buf, hkv, hd). Returns (out, new_k, new_v).
+    """
+    buf = cache_k.shape[1]
+    pos = cache_len  # absolute position of the new token
+    q, k, v = _qkv(x, p, cfg, positions=pos[None, None] if pos.ndim == 0
+                   else pos, rope=True)
+    # ring-buffer slot
+    slot = pos % buf if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    kv_len = jnp.minimum(pos + 1, buf)
+    if cfg.sliding_window:
+        # ring buffer: all buf slots may be valid once wrapped; masking by
+        # kv_len handles warmup. RoPE phases are stored pre-rotated, and the
+        # window mask is implicit in the buffer size.
+        o = mha(q, ck, cv, causal=False, kv_len=kv_len, block=buf,
+                unroll=cfg.unroll_layers)
+    else:
+        o = mha(q, ck, cv, causal=False, kv_len=kv_len,
+                block=min(buf, 2048), unroll=cfg.unroll_layers)
+    return jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"])), ck, cv

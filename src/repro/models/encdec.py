@@ -1,0 +1,157 @@
+"""Encoder-decoder (whisper-style). Conv/mel frontend is a stub: inputs
+are precomputed frame embeddings (b, encoder_len, d_model) — DESIGN.md §5.
+
+Encoder: bidirectional self-attention stack. Decoder: causal self-attn +
+cross-attn + MLP per layer, scanned over layers. Cross K/V are cached at
+prefill for decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .transformer import scan_or_unroll
+from .layers import (apply_mlp, apply_norm, cast, init_mlp, init_norm,
+                     sinusoidal_pos)
+
+
+def init_encdec(key, cfg) -> Dict:
+    ke, kd = jax.random.split(key)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": init_norm(k, cfg),
+                "mixer": attn_mod.init_attention(k1, cfg),
+                "norm2": init_norm(k, cfg),
+                "ffn": init_mlp(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": init_norm(k, cfg),
+                "self": attn_mod.init_attention(k1, cfg),
+                "norm_c": init_norm(k, cfg),
+                "cross": attn_mod.init_attention(k2, cfg),
+                "norm2": init_norm(k, cfg),
+                "ffn": init_mlp(k3, cfg)}
+
+    stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return {
+        "encoder": stack([enc_layer(k) for k in enc_keys]),
+        "enc_norm": init_norm(ke, cfg),
+        "decoder": stack([dec_layer(k) for k in dec_keys]),
+        "final_norm": init_norm(kd, cfg),
+    }
+
+
+def encode(params, enc_embeds, cfg):
+    """enc_embeds: (b, senc, d) stub frames → encoder hidden states."""
+    x = enc_embeds + sinusoidal_pos(enc_embeds.shape[1],
+                                    cfg.d_model).astype(enc_embeds.dtype)
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        x = x + attn_mod.attention_block(h, lp["mixer"], cfg, causal=False)
+        h2 = apply_norm(x, lp["norm2"], cfg)
+        return x + apply_mlp(h2, lp["ffn"], cfg), None
+
+    x, _ = scan_or_unroll(body, x, params["encoder"], cfg)
+    return apply_norm(x, params["enc_norm"], cfg)
+
+
+def _cross_kv(lp, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, cast(lp["cross"]["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, cast(lp["cross"]["wv"]))
+    if "bv" in lp["cross"]:
+        v = v + cast(lp["cross"]["bv"])
+    return k, v
+
+
+def _cross_attend(h, lp, ck, cv):
+    q = jnp.einsum("bsd,dhk->bshk", h, cast(lp["cross"]["wq"]))
+    if "bq" in lp["cross"]:
+        q = q + cast(lp["cross"]["bq"])
+    o = attn_mod.mha(q, ck, cv, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, cast(lp["cross"]["wo"]))
+
+
+def decode_forward(params, x, enc_out, cfg, *, positions=None):
+    """Full-sequence decoder forward (training). x: (b, s, d)."""
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        x = x + attn_mod.attention_block(h, lp["self"], cfg, causal=True,
+                                         positions=positions)
+        hc = apply_norm(x, lp["norm_c"], cfg)
+        ck, cv = _cross_kv(lp, enc_out)
+        x = x + _cross_attend(hc, lp, ck, cv)
+        h2 = apply_norm(x, lp["norm2"], cfg)
+        return x + apply_mlp(h2, lp["ffn"], cfg), None
+
+    x, _ = scan_or_unroll(body, x, params["decoder"], cfg)
+    return apply_norm(x, params["final_norm"], cfg)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    L = cfg.n_layers
+    kv = (L, batch, max_len, cfg.n_kv, cfg.hd)
+    ckv = (L, batch, cfg.encoder_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "ck": jnp.zeros(ckv, dtype), "cv": jnp.zeros(ckv, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, x, enc_out, cfg, max_len: int):
+    """Decoder prefill: forward + build self-KV and cross-KV caches."""
+    b, s, _ = x.shape
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        q, k, v = attn_mod._qkv(h, lp["self"], cfg,
+                                positions=jnp.arange(s))
+        o = attn_mod.mha(q, k, v, causal=True, unroll=cfg.unroll_layers)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, cast(lp["self"]["wo"]))
+        hc = apply_norm(x, lp["norm_c"], cfg)
+        ck, cv = _cross_kv(lp, enc_out)
+        x = x + _cross_attend(hc, lp, ck, cv)
+        h2 = apply_norm(x, lp["norm2"], cfg)
+        x = x + apply_mlp(h2, lp["ffn"], cfg)
+        return x, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+                   "ck": ck.astype(jnp.bfloat16),
+                   "cv": cv.astype(jnp.bfloat16)}
+
+    x, kvs = scan_or_unroll(body, x, params["decoder"], cfg)
+    cache = init_cache(cfg, b, max_len)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], kvs["k"], (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], kvs["v"], (0, 0, 0, 0, 0))
+    cache["ck"], cache["cv"] = kvs["ck"], kvs["cv"]
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    return apply_norm(x, params["final_norm"], cfg), cache
+
+
+def decode_step(params, cache, x_t, cfg):
+    """x_t: (b, 1, d) → (h_t, new_cache)."""
+    cur = cache["len"]
+
+    def body(x, scan_in):
+        lp, ck_self, cv_self, ck, cv = scan_in
+        h = apply_norm(x, lp["norm1"], cfg)
+        mx, nk, nv = attn_mod.decode_attention(h, lp["self"], cfg,
+                                               ck_self, cv_self, cur)
+        x = x + mx
+        hc = apply_norm(x, lp["norm_c"], cfg)
+        x = x + _cross_attend(hc, lp, ck, cv)
+        h2 = apply_norm(x, lp["norm2"], cfg)
+        x = x + apply_mlp(h2, lp["ffn"], cfg)
+        return x, (nk, nv)
+
+    x, (nk, nv) = scan_or_unroll(
+        body, x_t, (params["decoder"], cache["k"], cache["v"],
+                    cache["ck"], cache["cv"]), cfg)
+    new_cache = dict(cache, k=nk, v=nv, len=cur + 1)
+    return apply_norm(x, params["final_norm"], cfg), new_cache

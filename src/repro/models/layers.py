@@ -1,0 +1,126 @@
+"""Shared neural building blocks (norms, positions, MLPs, inits).
+
+Parameters are stored in float32 (master copy); compute is bf16 by default
+(cast at use), matching MaxText-style mixed precision.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x, scale, bias=None, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale
+    if bias is not None:
+        y = y + bias
+    return y.astype(dt)
+
+
+def init_norm(key, cfg, d=None) -> Dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(x, p, cfg):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ------------------------------------------------------------- positions
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (b, s, h, hd); positions: (b, s) or (s,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (b, s, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+def sinusoidal_pos(seq_len: int, d_model: int, offset=0):
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, i / d_model)
+    emb = jnp.zeros((seq_len, d_model), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(ang))
+    emb = emb.at[:, 1::2].set(jnp.cos(ang))
+    return emb
+
+
+# ------------------------------------------------------------------ MLPs
+def init_mlp(key, cfg) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"wi": dense_init(k1, (d, f)), "wd": dense_init(k3, (f, d), f)}
+    if cfg.mlp == "swiglu":
+        p["wg"] = dense_init(k2, (d, f))
+    return p
+
+
+def apply_mlp(x, p, cfg):
+    from repro.sharding import shd
+    h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"]))
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["wg"]))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    h = shd(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["wd"]))
+
+
+def unembed(h, embed, unembed_w=None, softcap: float = 0.0):
+    """h: (b, s, d) → logits (b, s, v) in float32."""
+    w = unembed_w if unembed_w is not None else embed.T
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

@@ -1,0 +1,207 @@
+"""Unified model API: build_model(cfg) → init / forward / loss / prefill /
+decode_step, uniform across the 6 architecture families.
+
+Batch dict keys:
+  tokens (b, s) int32           — decoder/LM tokens
+  labels (b, s) int32           — next-token targets (train)
+  encoder_embeds (b, senc, d)   — audio stub (whisper)
+  image_embeds (b, nimg, d)     — vision stub (VLMs; prepended to text)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shd
+from . import encdec, transformer
+from .layers import cast, embed_init, sinusoidal_pos, unembed
+
+LB_WEIGHT = 0.01
+Z_WEIGHT = 1e-3
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable
+    forward: Callable          # (params, batch, training) -> (logits, aux)
+    hidden: Callable           # (params, batch) -> (b, s, d) final states
+    loss: Callable             # (params, batch) -> (scalar, metrics)
+    prefill: Callable          # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable      # (params, cache, tokens(b,1)) -> (logits, cache)
+    init_cache: Callable       # (batch, max_len) -> cache
+
+
+def _embed_tokens(params, tokens, cfg):
+    x = cast(params["embed"])[tokens]
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(tokens.shape[1], cfg.d_model).astype(x.dtype)
+    return shd(x, "batch", None, None)
+
+
+def _logits(params, h, cfg):
+    w = params.get("unembed")
+    return unembed(h, params["embed"], None if w is None else w,
+                   cfg.logit_softcap)
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def build_model(cfg) -> Model:
+    if cfg.modality == "audio":
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+# --------------------------------------------------------- decoder-only
+def _build_decoder(cfg) -> Model:
+    n_img = cfg.num_image_tokens if cfg.modality == "vlm" else 0
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"embed": embed_init(k1, (cfg.vocab, cfg.d_model)),
+             **transformer.init_stack(k2, cfg)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = embed_init(k3, (cfg.d_model, cfg.vocab))
+        return {"params": p}
+
+    def _inputs(params, batch):
+        x = _embed_tokens(params["params"], batch["tokens"], cfg)
+        if n_img:
+            img = batch["image_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    def hidden(params, batch, training=False):
+        x, positions = _inputs(params, batch)
+        h, aux = transformer.apply_stack(params["params"], x, cfg,
+                                         positions=positions,
+                                         remat=training)
+        return h, aux
+
+    def forward(params, batch, training=False):
+        h, aux = hidden(params, batch, training)
+        if n_img:
+            h = h[:, n_img:]
+        return _logits(params["params"], h, cfg), aux
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch, training=True)
+        ce = _xent(logits, batch["labels"])
+        total = ce + LB_WEIGHT * aux["lb_loss"] + Z_WEIGHT * aux["z_loss"]
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    def init_cache(batch, max_len):
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def prefill(params, batch, max_len=None):
+        x, positions = _inputs(params, batch)
+        h, cache = transformer.prefill_stack(params["params"], x, cfg,
+                                             positions=positions,
+                                             max_len=max_len)
+        if n_img:
+            h = h[:, n_img:]
+        return _logits(params["params"], h, cfg), cache
+
+    def decode_step(params, cache, tokens):
+        x = _embed_tokens(params["params"], tokens, cfg)
+        h, cache = transformer.decode_stack(params["params"], cache, x, cfg)
+        return _logits(params["params"], h, cfg), cache
+
+    return Model(cfg, init, forward,
+                 lambda p, b: hidden(p, b)[0], loss, prefill, decode_step,
+                 init_cache)
+
+
+# ------------------------------------------------------ encoder-decoder
+def _build_encdec(cfg) -> Model:
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"embed": embed_init(k1, (cfg.vocab, cfg.d_model)),
+             **encdec.init_encdec(k2, cfg)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = embed_init(k3, (cfg.d_model, cfg.vocab))
+        return {"params": p}
+
+    def _enc(params, batch):
+        return encdec.encode(params["params"],
+                             batch["encoder_embeds"].astype(jnp.bfloat16),
+                             cfg)
+
+    def hidden(params, batch, training=False):
+        enc_out = _enc(params, batch)
+        x = _embed_tokens(params["params"], batch["tokens"], cfg)
+        h = encdec.decode_forward(params["params"], x, enc_out, cfg,
+                                  positions=jnp.arange(x.shape[1]))
+        return h, dict(transformer.AUX0)
+
+    def forward(params, batch, training=False):
+        h, aux = hidden(params, batch, training)
+        return _logits(params["params"], h, cfg), aux
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch, training=True)
+        ce = _xent(logits, batch["labels"])
+        return ce, {"ce": ce, **aux}
+
+    def init_cache(batch, max_len):
+        return encdec.init_cache(cfg, batch, max_len)
+
+    def prefill(params, batch, max_len=None):
+        enc_out = _enc(params, batch)
+        x = _embed_tokens(params["params"], batch["tokens"], cfg)
+        max_len = max_len or x.shape[1]
+        h, cache = encdec.prefill(params["params"], x, enc_out, cfg,
+                                  max_len)
+        return _logits(params["params"], h, cfg), cache
+
+    def decode_step(params, cache, tokens):
+        x = _embed_tokens(params["params"], tokens, cfg)
+        h, cache = encdec.decode_step(params["params"], cache, x, cfg)
+        return _logits(params["params"], h, cfg), cache
+
+    return Model(cfg, init, forward,
+                 lambda p, b: hidden(p, b)[0], loss, prefill, decode_step,
+                 init_cache)
+
+
+# ------------------------------------------------------------ accounting
+def param_count(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count, used for MODEL_FLOPS = 6·N·D."""
+    d, f = cfg.d_model, cfg.d_ff
+    n = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        return d * cfg.n_heads * cfg.hd * 2 + d * cfg.n_kv * cfg.hd * 2
+
+    def mlp_params():
+        return d * f * (3 if cfg.mlp == "swiglu" else 2)
+
+    def moe_params():
+        e = cfg.top_k if active_only else cfg.n_experts
+        return e * d * f * 3 + d * cfg.n_experts
+
+    def ssm_params():
+        d_in = cfg.d_inner
+        gN = cfg.ssm_groups * cfg.ssm_state
+        nh = cfg.ssm_heads
+        proj = d * (2 * d_in + 2 * gN + nh)
+        return proj + cfg.ssm_conv * (d_in + 2 * gN) + d_in * d + d_in
+
+    for i in range(cfg.n_layers):
+        n += attn_params() if cfg.layer_kind(i) == "attn" else ssm_params()
+        if f:
+            n += moe_params() if cfg.ffn_kind(i) == "moe" else mlp_params()
+        n += 2 * d  # norms
+    if cfg.modality == "audio":
+        n += cfg.encoder_layers * (attn_params() + mlp_params() + 2 * d)
+        n += cfg.n_layers * attn_params()  # cross-attention
+    return n

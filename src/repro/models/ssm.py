@@ -1,0 +1,209 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan + decode step.
+
+TPU adaptation (DESIGN.md §3): the SSD chunked formulation turns the
+selective-scan into MXU-friendly block matmuls — intra-chunk terms are
+(chunk × chunk) attention-like products, inter-chunk terms a short
+``lax.scan`` over chunk states (b, heads, head_dim, state). The depthwise
+causal conv (width 4) precedes the SSM as in the reference model.
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token — this is
+what makes long_500k decode run for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shd
+from .layers import cast, dense_init, rms_norm
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    nh = cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    gN = cfg.ssm_groups * cfg.ssm_state
+    conv_dim = d_in + 2 * gN
+    return d_in, nh, hd, gN, conv_dim
+
+
+def init_ssm(key, cfg) -> Dict:
+    d = cfg.d_model
+    d_in, nh, hd, gN, conv_dim = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * gN + nh      # z, xBC, dt
+    return {
+        "in_proj": dense_init(k1, (d, proj_out), d),
+        "conv_w": dense_init(k2, (cfg.ssm_conv, conv_dim), cfg.ssm_conv),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "ssm_D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh).astype(jnp.float32))),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(k3, (d_in, d), d_in),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, nh, hd, gN, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * gN], axis=-1)
+    return z, xBC, dt
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_forward(x, dt, A, B, C, chunk: int):
+    """Chunked SSD. x: (b, l, h, p); dt: (b, l, h); A: (h,) negative;
+    B, C: (b, l, g, n). Returns (y, final_state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    # chunked views: (b, nc, chunk, ...)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    # broadcast groups → heads
+    Bh = jnp.repeat(Bc, rep, axis=3)       # (b, nc, chunk, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]      # (b, nc, chunk, h) ≤ 0
+    dA = dA.astype(jnp.float32)
+    dA_cum = jnp.cumsum(dA, axis=2)        # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic within the chunk, like masked attention)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # (b,nc,h,c,c)
+    scores = jnp.einsum("bzchn,bzshn->bzhcs", Ch, Bh)     # (b,nc,h,c,c)
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bzhcs,bzshp->bzchp",
+                        (scores * Lmat).astype(xc.dtype), xdt)
+
+    # ---- chunk states then inter-chunk recurrence
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,c,h)
+    states = jnp.einsum("bzchn,bzchp->bzhpn",
+                        Bh * decay_to_end[..., None].astype(Bh.dtype),
+                        xdt)                                # (b,nc,h,p,n)
+
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b,nc,h)
+
+    def inter(carry, inp):
+        st, dec = inp                                       # (b,h,p,n),(b,h)
+        new = st + carry * dec[..., None, None].astype(carry.dtype)
+        return new, carry                                   # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p, n), xc.dtype)
+    final_state, prev_states = jax.lax.scan(
+        inter, init,
+        (states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,nc,h,p,n)
+
+    # ---- contribution of carried-in state to each position
+    state_decay = jnp.exp(dA_cum)                           # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bzhpn->bzchp",
+                       Ch * state_decay[..., None].astype(Ch.dtype),
+                       prev_states)
+
+    y = (y_diag + y_off).reshape(b, L, h, p)
+    return y[:, :l], final_state
+
+
+def apply_ssm(x, p, cfg, *, positions=None) -> jnp.ndarray:
+    """Full-sequence SSD mixer sublayer. x: (b, l, d_model)."""
+    y, _, _ = ssm_forward_with_state(x, p, cfg)
+    return y
+
+
+def ssm_forward_with_state(x, p, cfg):
+    """Returns (y, conv_state, ssm_state) — prefill builds decode caches."""
+    b, l, _ = x.shape
+    d_in, nh, hd, gN, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dk->blk", x, cast(p["in_proj"]))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # depthwise causal conv, width w
+    w = cfg.ssm_conv
+    xBC_pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    conv_state = xBC_pad[:, -(w - 1):]                      # last w-1 inputs
+    kern = cast(p["conv_w"])                                # (w, conv_dim)
+    xBC = sum(xBC_pad[:, i:i + l] * kern[i] for i in range(w))
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + gN], axis=-1)
+    xs = xs.reshape(b, l, nh, hd)
+    xs = shd(xs, "batch", None, "ssm_heads", None)
+    B = B.reshape(b, l, cfg.ssm_groups, n)
+    C = C.reshape(b, l, cfg.ssm_groups, n)
+    A = -jnp.exp(p["A_log"])
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssd_forward(xs, dt_full.astype(xs.dtype), A, B, C,
+                           cfg.ssm_chunk)
+    y = y + xs * cast(p["ssm_D"])[None, None, :, None]
+    y = y.reshape(b, l, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return jnp.einsum("bld,dk->blk", y, cast(p["out_proj"])), \
+        conv_state, state
+
+
+def init_ssm_cache(cfg, batch: int, n_layers: int, dtype=jnp.bfloat16):
+    d_in, nh, hd, gN, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((n_layers, batch, nh, hd, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def decode_ssm(x, p, cfg, conv_state, ssm_state):
+    """One-token step. x: (b, 1, d). Returns (y, conv_state, ssm_state)."""
+    b = x.shape[0]
+    d_in, nh, hd, gN, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dk->blk", x, cast(p["in_proj"]))[:, 0]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # conv over the stored window + current input
+    w = cfg.ssm_conv
+    kern = cast(p["conv_w"])
+    window = jnp.concatenate(
+        [conv_state.astype(xBC.dtype), xBC[:, None, :]], axis=1)  # (b,w,cd)
+    xBC_t = jnp.einsum("bwc,wc->bc", window, kern)
+    new_conv = window[:, 1:]
+    xBC_t = jax.nn.silu(xBC_t)
+    xs, B, C = jnp.split(xBC_t, [d_in, d_in + gN], axis=-1)
+    xs = xs.reshape(b, nh, hd)
+    B = B.reshape(b, cfg.ssm_groups, n)
+    C = C.reshape(b, cfg.ssm_groups, n)
+    rep = nh // cfg.ssm_groups
+    Bh = jnp.repeat(B, rep, axis=1)        # (b, nh, n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    A = -jnp.exp(p["A_log"])
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,nh)
+    dA = jnp.exp(dt_t * A[None, :])                                 # (b,nh)
+    upd = jnp.einsum("bhp,bhn->bhpn", xs.astype(jnp.float32) *
+                     dt_t[..., None], Bh.astype(jnp.float32))
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state,
+                   Ch.astype(jnp.float32)).astype(xs.dtype)
+    y = y + xs * cast(p["ssm_D"])[None, :, None]
+    y = y.reshape(b, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return jnp.einsum("bd,dk->bk", y, cast(p["out_proj"]))[:, None], \
+        new_conv, new_state

@@ -1,0 +1,261 @@
+"""Decoder stack: scan-over-periods, heterogeneous layer patterns.
+
+Layers repeat with period = lcm(attention interleave, MoE interleave)
+(period 1 for homogeneous stacks, 8 for jamba's 1:7 + MoE-every-2). Params
+for each position-in-period are stacked over the periods and the stack is
+driven by one ``lax.scan`` — HLO size stays O(period), not O(L), which is
+what keeps 96-layer dry-run lowering cheap.
+
+The same period machinery drives the three entry points:
+  * ``apply_stack``   — training forward (optionally remat'd per period),
+  * ``prefill_stack`` — forward that also emits per-layer decode caches,
+  * ``decode_stack``  — one-token step consuming/updating caches.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shd
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+AUX0 = {"lb_loss": jnp.zeros((), jnp.float32),
+        "z_loss": jnp.zeros((), jnp.float32),
+        "fraction_dropped": jnp.zeros((), jnp.float32)}
+
+
+def scan_or_unroll(body, carry, xs, cfg):
+    """lax.scan over the period stack, or a python loop when
+    cfg.unroll_layers (used by the dry-run cost model — scan bodies are
+    counted once by XLA cost_analysis)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for z in range(n):
+        xz = jax.tree.map(lambda a: a[z], xs)
+        carry, y = body(carry, xz)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def stack_period(cfg) -> int:
+    p = 1
+    if cfg.arch_type == "hybrid" and cfg.attn_every:
+        p = math.lcm(p, cfg.attn_every)
+    if cfg.n_experts:
+        p = math.lcm(p, cfg.moe_every)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def position_kinds(cfg) -> List[Tuple[str, str]]:
+    """[(mixer_kind, ffn_kind)] for each position in the period."""
+    return [(cfg.layer_kind(i), cfg.ffn_kind(i))
+            for i in range(stack_period(cfg))]
+
+
+def init_layer(key, cfg, mixer_kind: str, ffn_kind: str) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": init_norm(key, cfg)}
+    if mixer_kind == "attn":
+        p["mixer"] = attn_mod.init_attention(k1, cfg)
+    else:
+        p["mixer"] = ssm_mod.init_ssm(k1, cfg)
+    if ffn_kind != "none":
+        if not cfg.parallel_block:
+            p["norm2"] = init_norm(key, cfg)
+        if ffn_kind == "moe":
+            p["ffn"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["ffn"] = init_mlp(k2, cfg)
+    return p
+
+
+def init_stack(key, cfg) -> Dict:
+    period = stack_period(cfg)
+    n_periods = cfg.n_layers // period
+    kinds = position_kinds(cfg)
+    keys = jax.random.split(key, period * n_periods).reshape(
+        n_periods, period, 2)
+
+    positions = []
+    for pos in range(period):
+        mixer_kind, ffn_kind = kinds[pos]
+        per = [init_layer(keys[z, pos], cfg, mixer_kind, ffn_kind)
+               for z in range(n_periods)]
+        positions.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return {"positions": positions, "final_norm": init_norm(key, cfg)}
+
+
+def _ffn(x_normed, lp, cfg, ffn_kind):
+    if ffn_kind == "moe":
+        from . import moe_ep
+        if moe_ep.ep_applicable(x_normed, cfg):
+            return moe_ep.apply_moe_ep(x_normed, lp["ffn"], cfg)
+        return moe_mod.apply_moe(x_normed, lp["ffn"], cfg)
+    return apply_mlp(x_normed, lp["ffn"], cfg), dict(AUX0)
+
+
+def _block(x, lp, cfg, mixer_kind, ffn_kind, positions, causal=True):
+    """One layer: returns (x, aux)."""
+    h = apply_norm(x, lp["norm1"], cfg)
+    if mixer_kind == "attn":
+        mx = attn_mod.attention_block(h, lp["mixer"], cfg, causal=causal,
+                                      positions=positions)
+    else:
+        mx = ssm_mod.apply_ssm(h, lp["mixer"], cfg)
+    if ffn_kind == "none":
+        return shd(x + mx, "batch", None, None), dict(AUX0)
+    if cfg.parallel_block:
+        f, aux = _ffn(h, lp, cfg, ffn_kind)
+        return shd(x + mx + f, "batch", None, None), aux
+    x = x + mx
+    h2 = apply_norm(x, lp["norm2"], cfg)
+    f, aux = _ffn(h2, lp, cfg, ffn_kind)
+    return shd(x + f, "batch", None, None), aux
+
+
+def apply_stack(params, x, cfg, *, positions=None, causal=True,
+                remat: bool = False):
+    """x: (b, s, d) → (hidden (b, s, d), aux)."""
+    kinds = position_kinds(cfg)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for pos, (mk, fk) in enumerate(kinds):
+            x, a = _block(x, period_params[pos], cfg, mk, fk, positions,
+                          causal)
+            aux = {k: aux[k] + a[k] for k in aux}
+        return (x, aux), None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    (x, aux), _ = scan_or_unroll(body, (x, dict(AUX0)),
+                                 tuple(params["positions"]), cfg)
+    aux = {k: v / max(cfg.n_layers, 1) for k, v in aux.items()}
+    return apply_norm(x, params["final_norm"], cfg), aux
+
+
+# ----------------------------------------------------------------- caches
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    period = stack_period(cfg)
+    n_periods = cfg.n_layers // period
+    kinds = position_kinds(cfg)
+    per_pos = []
+    buf = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    for mk, _ in kinds:
+        if mk == "attn":
+            shape = (n_periods, batch, buf, cfg.n_kv, cfg.hd)
+            per_pos.append({"k": jnp.zeros(shape, dtype),
+                            "v": jnp.zeros(shape, dtype)})
+        else:
+            d_in, nh, hd, gN, conv_dim = ssm_mod._dims(cfg)
+            per_pos.append({
+                "conv": jnp.zeros((n_periods, batch, cfg.ssm_conv - 1,
+                                   conv_dim), dtype),
+                "ssm": jnp.zeros((n_periods, batch, nh, hd, cfg.ssm_state),
+                                 jnp.float32)})
+    return {"positions": per_pos, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill_stack(params, x, cfg, *, positions=None, max_len=None):
+    """Forward pass that also builds decode caches. Returns (h, cache).
+
+    The cache buffer is sized ``max(max_len, s)`` (window-capped) so decode
+    steps have headroom. With a sliding window, ring alignment assumes the
+    prefill length is a multiple of the window once s > window.
+    """
+    kinds = position_kinds(cfg)
+    b, s, _ = x.shape
+    cap = max(max_len or s, s)
+    buf = min(cap, cfg.sliding_window) if cfg.sliding_window else cap
+
+    def period_body(x, period_params):
+        new_caches = []
+        for pos, (mk, fk) in enumerate(kinds):
+            lp = period_params[pos]
+            h = apply_norm(x, lp["norm1"], cfg)
+            if mk == "attn":
+                q, k, v = attn_mod._qkv(h, lp["mixer"], cfg, positions)
+                o = attn_mod.mha(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 unroll=cfg.unroll_layers)
+                mx = jnp.einsum("bshk,hkd->bsd", o,
+                                lp["mixer"]["wo"].astype(o.dtype))
+                kc = k[:, -buf:].astype(jnp.bfloat16)
+                vc = v[:, -buf:].astype(jnp.bfloat16)
+                if kc.shape[1] < buf:  # pad to cache capacity
+                    padw = ((0, 0), (0, buf - kc.shape[1]), (0, 0), (0, 0))
+                    kc, vc = jnp.pad(kc, padw), jnp.pad(vc, padw)
+                new_caches.append({"k": kc, "v": vc})
+            else:
+                mx, conv_st, ssm_st = ssm_mod.ssm_forward_with_state(
+                    h, lp["mixer"], cfg)
+                new_caches.append({"conv": conv_st.astype(jnp.bfloat16),
+                                   "ssm": ssm_st.astype(jnp.float32)})
+            if fk == "none":
+                x = x + mx
+            elif cfg.parallel_block:
+                f, _ = _ffn(h, lp, cfg, fk)
+                x = x + mx + f
+            else:
+                x = x + mx
+                h2 = apply_norm(x, lp["norm2"], cfg)
+                f, _ = _ffn(h2, lp, cfg, fk)
+                x = x + f
+            x = shd(x, "batch", None, None)
+        return x, tuple(new_caches)
+
+    x, caches = scan_or_unroll(period_body, x,
+                               tuple(params["positions"]), cfg)
+    return apply_norm(x, params["final_norm"], cfg), \
+        {"positions": list(caches), "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_stack(params, cache, x_t, cfg):
+    """One-token step. x_t: (b, 1, d). Returns (h_t, new_cache)."""
+    kinds = position_kinds(cfg)
+    cur_len = cache["len"]
+
+    def period_body(x, scan_in):
+        period_params, period_cache = scan_in
+        new_caches = []
+        for pos, (mk, fk) in enumerate(kinds):
+            lp, cc = period_params[pos], period_cache[pos]
+            h = apply_norm(x, lp["norm1"], cfg)
+            if mk == "attn":
+                mx, ck, cv = attn_mod.decode_attention(
+                    h, lp["mixer"], cfg, cc["k"], cc["v"], cur_len)
+                new_caches.append({"k": ck, "v": cv})
+            else:
+                mx, conv_st, ssm_st = ssm_mod.decode_ssm(
+                    h, lp["mixer"], cfg, cc["conv"], cc["ssm"])
+                new_caches.append({"conv": conv_st, "ssm": ssm_st})
+            if fk == "none":
+                x = x + mx
+            elif cfg.parallel_block:
+                f, _ = _ffn(h, lp, cfg, fk)
+                x = x + mx + f
+            else:
+                x = x + mx
+                h2 = apply_norm(x, lp["norm2"], cfg)
+                f, _ = _ffn(h2, lp, cfg, fk)
+                x = x + f
+        return x, tuple(new_caches)
+
+    x, caches = scan_or_unroll(period_body, x_t,
+                               (tuple(params["positions"]),
+                                tuple(cache["positions"])), cfg)
+    h = apply_norm(x, params["final_norm"], cfg)
+    return h, {"positions": list(caches), "len": cur_len + 1}

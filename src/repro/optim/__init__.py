@@ -1,0 +1,2 @@
+from .adamw import adamw, apply_updates, clip_by_global_norm, init_adamw
+from .schedules import constant, cosine_with_warmup

@@ -1,0 +1,61 @@
+"""AdamW + grad clipping, implemented from scratch (optax not in env).
+
+State layout mirrors the params pytree (m, v in float32), so param
+sharding specs apply to the optimizer state unchanged — the dry-run's
+in_shardings reuse the same tree of PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.1) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / b1t, v / b2t
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (-lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    updates = jax.tree.map(lambda t: t[0], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return updates, AdamWState(step=step, m=m, v=v)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,1 @@
+from .engine import make_decode_step, make_prefill_step, generate

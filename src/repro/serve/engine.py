@@ -1,0 +1,42 @@
+"""Serving steps: prefill (build KV/state caches) and decode (one token
+per call against the cache). These are the functions the decode_32k /
+long_500k dry-run shapes lower.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch, *, max_len=None):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens):
+        """tokens: (b, 1) → (logits (b, 1, v), new cache)."""
+        return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+def generate(model, params, batch, *, steps: int, max_len: int,
+             greedy: bool = True, key=None):
+    """Simple auto-regressive loop used by examples/tests (host loop)."""
+    logits, cache = model.prefill(params, batch, max_len)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    decode = jax.jit(model.decode_step)
+    for i in range(steps - 1):
+        logits, cache = decode(params, cache, tok)
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits)[..., None] \
+                .astype(jnp.int32)[:, 0]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

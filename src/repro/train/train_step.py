@@ -1,0 +1,44 @@
+"""AdamW train step: value_and_grad over the model loss, grad clip,
+schedule. One function serves smoke tests (1 device) and the dry-run
+(pjit over the production mesh — in/out shardings supplied by the
+launcher).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (adamw, apply_updates, clip_by_global_norm,
+                         cosine_with_warmup, init_adamw)
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_adamw(params))
+
+
+def make_train_step(model, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    max_grad_norm=1.0, weight_decay=0.1) -> Callable:
+    sched = cosine_with_warmup(peak_lr, warmup, total)
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = sched(state.opt.step)
+        updates, opt = adamw(grads, state.opt, state.params, lr=lr,
+                             weight_decay=weight_decay)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

@@ -1,0 +1,72 @@
+"""Baseline sanity + the paper's privacy-by-design property."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import accuracy, fedavg, scaffold, \
+    sgd_logreg_centralized
+from repro.core import activations as acts
+from repro.core import client_stats, fed_fit, predict_labels
+from repro.data import partition, synthetic
+
+
+def _data(seed=0):
+    X, y = synthetic.generate("susy", scale=8e-4, seed=seed)
+    return synthetic.train_test_split(X, y)
+
+
+def test_fedavg_converges_iid():
+    (Xtr, ytr), (Xte, yte) = _data()
+    parts = partition.iid(Xtr, ytr, 10)
+    W = fedavg(parts, 2, rounds=15, local_steps=10)
+    assert accuracy(W, Xte, yte) > 0.70
+
+
+def test_scaffold_beats_or_matches_fedavg_noniid():
+    (Xtr, ytr), (Xte, yte) = _data()
+    parts = partition.pathological(Xtr, ytr, 10)
+    acc_fa = accuracy(fedavg(parts, 10, local_steps=10), Xte, yte)
+    acc_sc = accuracy(scaffold(parts, 10, local_steps=10), Xte, yte)
+    assert acc_sc > 0.6 and acc_fa > 0.5
+    # control variates shouldn't hurt under pathological skew
+    assert acc_sc >= acc_fa - 0.05
+
+
+def test_ours_matches_centralized_sgd_ballpark():
+    (Xtr, ytr), (Xte, yte) = _data()
+    parts = partition.pathological(Xtr, ytr, 25)
+    W_ours = fed_fit([p[0] for p in parts],
+                     [acts.encode_labels(p[1], 2) for p in parts])
+    acc_ours = float((np.asarray(predict_labels(W_ours, Xte)) == yte)
+                     .mean())
+    W_sgd = sgd_logreg_centralized(Xtr, ytr, 2, steps=300)
+    assert acc_ours >= accuracy(W_sgd, Xte, yte) - 0.02
+
+
+# ------------------------------------------------- privacy by design
+def test_uploads_do_not_expose_raw_data():
+    """Paper §5: "no raw data is transmitted nor can be recovered from the
+    interchanged data". The upload (U_p S_p, m_p) is invariant to any
+    orthogonal rotation of the samples: two *different* datasets with the
+    same second-moment structure produce identical uploads, so inverting
+    the upload to recover X is ill-posed.
+    """
+    rng = np.random.default_rng(0)
+    n, m = 40, 6
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    D = rng.uniform(0.1, 0.9, size=(n, 1)).astype(np.float32)
+    act = acts.get("identity")
+    # a random rotation Q of the SAMPLE axis: X' = Q X (n×n orthogonal)
+    Q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    X2 = (Q @ X).astype(np.float32)
+    D2 = (Q @ D).astype(np.float32)
+
+    s1 = client_stats(X, D, act="identity", add_bias=False)
+    s2 = client_stats(X2, D2, act="identity", add_bias=False)
+    # gram of uploads identical although X2 != X
+    G1 = np.asarray(s1.US[0] @ s1.US[0].T)
+    G2 = np.asarray(s2.US[0] @ s2.US[0].T)
+    np.testing.assert_allclose(G1, G2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1.m_vec), np.asarray(s2.m_vec),
+                               rtol=1e-3, atol=1e-3)
+    assert not np.allclose(X, X2, atol=1e-2)   # the raw data differs

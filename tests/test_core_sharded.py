@@ -1,0 +1,64 @@
+"""Mesh-distributed federation tests.
+
+These need >1 device, and XLA locks the host device count at first jax
+init, so they run in a subprocess with XLA_FLAGS set (the rest of the
+suite keeps the default single CPU device, per the dry-run rules).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import activations as acts
+    from repro.core import centralized_solve_gram
+    from repro.core.sharded import (fed_fit_sharded, fed_fit_sharded_gram,
+                                    make_client_mesh)
+
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(0)
+    n, m, c = 512, 10, 2
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    y = rng.integers(0, c, size=n)
+    D = np.asarray(acts.encode_labels(y, c))
+    # pathological order: sharded clients see single-class blocks
+    order = np.argsort(y, kind="stable")
+    X, D = X[order], D[order]
+
+    mesh = make_client_mesh(8)
+    W_cen = centralized_solve_gram(X, D, act="logistic", lam=1e-3)
+    W_svd = fed_fit_sharded(X, D, act="logistic", lam=1e-3, mesh=mesh)
+    W_gram = fed_fit_sharded_gram(X, D, act="logistic", lam=1e-3, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(W_svd), np.asarray(W_cen),
+                               rtol=5e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(W_gram), np.asarray(W_cen),
+                               rtol=5e-3, atol=5e-4)
+
+    from repro.core.sharded import choose_wire, fed_fit_sharded_auto
+    # wide clients (r == m): gram wire; rank-deficient few clients: svd
+    assert choose_wire(P=8, m=11, r=11) == "gram"
+    assert choose_wire(P=8, m=8193, r=256) == "svd"
+    W_auto = fed_fit_sharded_auto(X, D, act="logistic", lam=1e-3,
+                                  mesh=mesh)
+    np.testing.assert_allclose(np.asarray(W_auto), np.asarray(W_cen),
+                               rtol=5e-3, atol=5e-4)
+    print("SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_fed_fit_matches_centralized():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout

@@ -1,0 +1,112 @@
+"""Pallas kernel validation: interpret-mode execution vs jnp oracles,
+swept over shapes and dtypes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import gram_stats, decode_gqa
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,m", [(64, 8), (512, 19), (1000, 29),
+                                 (130, 128), (257, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_stats_matches_ref(n, m, dtype):
+    rng = np.random.default_rng(hash((n, m)) % 2**31)
+    X = jnp.asarray(rng.normal(size=(n, m)), dtype)
+    fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n,)), dtype)
+    dbar = jnp.asarray(rng.normal(size=(n,)), dtype)
+    G, mv = gram_stats(X, fp, dbar, interpret=True)
+    G_ref, mv_ref = ref.gram_stats_ref(X, fp, dbar)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref),
+                               rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mv_ref),
+                               rtol=tol, atol=tol * 10)
+    assert G.dtype == jnp.float32 and mv.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("bm,bn", [(128, 256), (128, 512), (256, 128)])
+def test_gram_stats_block_shape_invariance(bm, bn):
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(700, 50)), jnp.float32)
+    fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(700,)), jnp.float32)
+    dbar = jnp.asarray(rng.normal(size=(700,)), jnp.float32)
+    G, mv = gram_stats(X, fp, dbar, bm=bm, bn=bn, interpret=True)
+    G_ref, mv_ref = ref.gram_stats_ref(X, fp, dbar)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mv_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gram_stats_multi_output_wrapper():
+    rng = np.random.default_rng(1)
+    n, m, c = 300, 12, 3
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    Fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n, c)), jnp.float32)
+    Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    G, mv = ops.client_gram_stats_fused(X, Db, Fp, interpret=True)
+    assert G.shape == (c, m, m) and mv.shape == (m, c)
+    for k in range(c):
+        Gr, mr = ref.gram_stats_ref(X, Fp[:, k], Db[:, k])
+        np.testing.assert_allclose(np.asarray(G[k]), np.asarray(Gr),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(mv[:, k]), np.asarray(mr),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_gram_stats_feeds_paper_solver():
+    """Kernel stats plugged into eq.-3 solve == centralized solve."""
+    from repro.core import activations as acts
+    from repro.core import centralized_solve_gram
+    rng = np.random.default_rng(2)
+    n, m = 400, 10
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    y = rng.integers(0, 2, size=n)
+    D = np.asarray(acts.encode_labels(y, 2))
+    act = acts.get("logistic")
+    dbar = act.f_inv(jnp.asarray(D))
+    fp = act.f_prime(dbar)
+    Xb = jnp.concatenate([jnp.ones((n, 1)), jnp.asarray(X)], axis=1)
+    G, mv = ops.client_gram_stats_fused(Xb, dbar, fp, interpret=True)
+    lam = 1e-3
+    W = jnp.linalg.solve(G[0] + lam * jnp.eye(m + 1), mv[:, 0])
+    W_ref = centralized_solve_gram(X, D[:, 0], act="logistic", lam=lam)
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref[:, 0]),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------- decode attn
+@pytest.mark.parametrize("b,hq,hkv,hd,S", [
+    (2, 8, 2, 64, 1024), (1, 9, 3, 64, 513), (2, 16, 16, 128, 300),
+    (1, 8, 1, 128, 2048),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_gqa_matches_ref(b, hq, hkv, hd, S, dtype):
+    rng = np.random.default_rng(hash((b, hq, S)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, S, hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, S, hkv, hd)), dtype)
+    kv_len = S - 7
+    out = decode_gqa(q, k, v, kv_len, interpret=True, block_s=256)
+    out_ref = ref.decode_gqa_ref(q, k, v, kv_len)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_decode_gqa_kv_len_masking():
+    """Entries past kv_len must not affect the output."""
+    rng = np.random.default_rng(5)
+    b, hq, hkv, hd, S = 1, 4, 2, 64, 512
+    q = jnp.asarray(rng.normal(size=(b, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, S, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, S, hkv, hd)), jnp.float32)
+    out1 = decode_gqa(q, k, v, 100, interpret=True, block_s=128)
+    k2 = k.at[:, 100:].set(999.0)
+    v2 = v.at[:, 100:].set(-999.0)
+    out2 = decode_gqa(q, k2, v2, 100, interpret=True, block_s=128)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,115 @@
+"""Property-style model invariants across architecture families."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data.pipeline import make_batch
+from repro.models import build_model
+
+FAMILIES = ["smollm-135m", "olmoe-1b-7b", "mamba2-2.7b", "jamba-v0.1-52b",
+            "command-r-35b"]
+
+
+def _setup(name, seq=24, batch=2, seed=0):
+    cfg = configs.get(name, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    b = {k: jnp.asarray(v) for k, v in
+         make_batch(cfg, seq, batch, seed=seed).items()}
+    return cfg, model, params, b
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_causality(name):
+    """Changing a future token must not change past logits.
+
+    MoE archs are tested with ample expert capacity: capacity-based
+    token-choice routing is *inherently* order-dependent once experts
+    overflow (a later token can displace an earlier one from a full
+    expert's buffer) — see test_moe_capacity_breaks_strict_causality.
+    """
+    cfg, model, params, batch = _setup(name)
+    if cfg.n_experts:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        from repro.models import build_model as _bm
+        model = _bm(cfg)
+    logits1, _ = model.forward(params, batch)
+    toks2 = batch["tokens"].at[:, -1].set(
+        (batch["tokens"][:, -1] + 7) % cfg.vocab)
+    logits2, _ = model.forward(params, dict(batch, tokens=toks2))
+    cut = batch["tokens"].shape[1] - 1
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :cut], np.float32),
+        np.asarray(logits2[:, :cut], np.float32), rtol=2e-2, atol=2e-2)
+    # and the last position DOES change (model isn't ignoring input)
+    assert not np.allclose(np.asarray(logits1[:, -1], np.float32),
+                           np.asarray(logits2[:, -1], np.float32),
+                           atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ["smollm-135m", "mamba2-2.7b"])
+def test_batch_independence(name):
+    """Examples in a batch must not leak into each other."""
+    cfg, model, params, batch = _setup(name, batch=3)
+    logits, _ = model.forward(params, batch)
+    # recompute example 0 alone
+    solo = {k: v[:1] for k, v in batch.items()}
+    logits_solo, _ = model.forward(params, solo)
+    np.testing.assert_allclose(np.asarray(logits_solo[0], np.float32),
+                               np.asarray(logits[0], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_breaks_strict_causality():
+    """Documented property, not a bug: with tight capacity, token-choice
+    MoE drops are order-dependent — changing a later token can displace an
+    earlier token's expert slot (the reason serving stacks use dropless
+    MoE or per-sequence dispatch). With ample capacity the model is
+    strictly causal (asserted in test_causality)."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get("olmoe-1b-7b", smoke=True),
+                              capacity_factor=0.5)  # force overflow
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, 24, 2, seed=0).items()}
+    logits1, aux = model.forward(params, batch)
+    assert float(aux["fraction_dropped"]) > 0
+    toks2 = batch["tokens"].at[:, -1].set(
+        (batch["tokens"][:, -1] + 7) % cfg.vocab)
+    logits2, _ = model.forward(params, dict(batch, tokens=toks2))
+    # at least the shapes/finiteness hold; strict equality of the past is
+    # NOT guaranteed under overflow — that is the point of this test
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+
+def test_swa_matches_full_attention_short_sequences():
+    """Sliding-window == full attention while seq ≤ window."""
+    cfg_full = configs.get("smollm-135m", smoke=True)
+    cfg_swa = configs.get("smollm-135m-swa", smoke=True)  # window 16
+    model_f = build_model(cfg_full)
+    model_w = build_model(cfg_swa)
+    params = model_f.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg_full, 16, 2, seed=3).items()}
+    lf, _ = model_f.forward(params, batch)
+    lw, _ = model_w.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(lf, np.float32),
+                               np.asarray(lw, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_differs_beyond_window():
+    cfg_full = configs.get("smollm-135m", smoke=True)
+    cfg_swa = configs.get("smollm-135m-swa", smoke=True)
+    model_f, model_w = build_model(cfg_full), build_model(cfg_swa)
+    params = model_f.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg_full, 48, 1, seed=4).items()}  # > window 16
+    lf, _ = model_f.forward(params, batch)
+    lw, _ = model_w.forward(params, batch)
+    assert not np.allclose(np.asarray(lf[:, -1], np.float32),
+                           np.asarray(lw[:, -1], np.float32), atol=1e-3)

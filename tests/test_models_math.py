@@ -1,0 +1,197 @@
+"""Math-level correctness of the model mixers against naive oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import moe as moe_mod
+
+
+# ------------------------------------------------------------------ mha
+def _naive_attention(q, k, v, causal, window=0, q_offset=0, kv_len=None):
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    # queries grouped per kv head in mha: q head order is (kv, group)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+    s = s * hd ** -0.5
+    qpos = q_offset + np.arange(sq)[:, None]
+    kpos = np.arange(skv)[None, :]
+    mask = np.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(jnp.asarray(mask)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+def _repeat_matches_grouped(hq, hkv):
+    # mha groups q heads as (hkv, group); jnp.repeat produces the same order
+    return True
+
+
+@pytest.mark.parametrize("sq,skv,blk", [(16, 16, 16), (16, 48, 16),
+                                        (32, 128, 32)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+def test_mha_matches_naive(sq, skv, blk, hq, hkv):
+    rng = np.random.default_rng(0)
+    hd = 32
+    q = jnp.asarray(rng.normal(size=(2, sq, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, skv, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, skv, hkv, hd)), jnp.float32)
+    off = skv - sq
+    out = attn_mod.mha(q, k, v, causal=True, q_offset=off, block=blk)
+    ref = _naive_attention(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mha_sliding_window():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 32, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 32, 4, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 32, 4, 16)), jnp.float32)
+    out = attn_mod.mha(q, k, v, causal=True, window=8, block=16)
+    ref = _naive_attention(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mha_kv_len_mask():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 1, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 4, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 4, 16)), jnp.float32)
+    out = attn_mod.mha(q, k, v, causal=False, kv_len=jnp.asarray(17),
+                       block=16)
+    ref = _naive_attention(q, k, v, causal=False, kv_len=17)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------------ SSD
+def _naive_ssd(x, dt, A, B, C):
+    """Sequential state-space recurrence (the SSD definition)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = np.repeat(np.asarray(B, np.float64), rep, axis=2)
+    Ch = np.repeat(np.asarray(C, np.float64), rep, axis=2)
+    xf = np.asarray(x, np.float64)
+    dtf = np.asarray(dt, np.float64)
+    Af = np.asarray(A, np.float64)
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros((b, l, h, p))
+    for t in range(l):
+        dA = np.exp(dtf[:, t] * Af[None, :])            # (b, h)
+        upd = np.einsum("bhp,bhn->bhpn", xf[:, t] * dtf[:, t, :, None],
+                        Bh[:, t])
+        state = state * dA[..., None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("l,chunk", [(16, 4), (17, 8), (64, 16)])
+def test_ssd_chunked_matches_recurrence(l, chunk):
+    rng = np.random.default_rng(3)
+    b, h, p, g, n = 2, 4, 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    y, state = ssm_mod.ssd_forward(x, dt, A, B, C, chunk)
+    y_ref, state_ref = _naive_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_chain_matches_forward():
+    """Running decode_ssm token-by-token == chunked forward."""
+    import dataclasses
+    from repro import configs
+    cfg = configs.get("mamba2-2.7b", smoke=True)
+    p = ssm_mod.init_ssm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 12, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_full, conv_st, ssm_st = ssm_mod.ssm_forward_with_state(x, p, cfg)
+
+    d_in, nh, hd, gN, conv_dim = ssm_mod._dims(cfg)
+    conv = jnp.zeros((2, cfg.ssm_conv - 1, conv_dim))
+    state = jnp.zeros((2, nh, hd, cfg.ssm_state))
+    ys = []
+    for t in range(12):
+        y_t, conv, state = ssm_mod.decode_ssm(x[:, t:t + 1], p, cfg,
+                                              conv, state)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(ssm_st),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------------------ MoE
+def test_moe_topk_equals_dense_when_k_is_E():
+    """top_k == n_experts with ample capacity ⇒ softmax-weighted dense mix."""
+    import dataclasses
+    from repro import configs
+    cfg = configs.get("olmoe-1b-7b", smoke=True)
+    cfg = dataclasses.replace(cfg, top_k=cfg.n_experts,
+                              capacity_factor=4.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.5,
+                    jnp.bfloat16)
+    out, aux = moe_mod.apply_moe(x, p, cfg)
+    assert float(aux["fraction_dropped"]) == 0.0
+
+    probs = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]))
+    wi, wg, wd = (p["experts_wi"].astype(jnp.bfloat16),
+                  p["experts_wg"].astype(jnp.bfloat16),
+                  p["experts_wd"].astype(jnp.bfloat16))
+    h = jnp.einsum("bsd,edf->bsef", x, wi)
+    g = jnp.einsum("bsd,edf->bsef", x, wg)
+    y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * h, wd)
+    ref = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), probs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=1e-1, atol=5e-2)
+
+
+def test_moe_capacity_drops_reported():
+    import dataclasses
+    from repro import configs
+    cfg = configs.get("olmoe-1b-7b", smoke=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)  # force drops
+    p = moe_mod.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(2, 64, 128)),
+                    jnp.bfloat16)
+    out, aux = moe_mod.apply_moe(x, p, cfg)
+    assert float(aux["fraction_dropped"]) > 0.0
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+
+
+def test_moe_load_balance_loss_uniform_is_one():
+    """Perfectly uniform router ⇒ lb_loss == 1 (switch normalization)."""
+    import dataclasses
+    from repro import configs
+    cfg = configs.get("dbrx-132b", smoke=True)
+    p = moe_mod.init_moe(jax.random.PRNGKey(2), cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform logits
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(1, 128, 128)),
+                    jnp.bfloat16)
+    out, aux = moe_mod.apply_moe(x, p, cfg)
+    # me uniform ⇒ E · Σ me·ce = E · (1/E)·Σce = Σce = 1
+    assert abs(float(aux["lb_loss"]) - 1.0) < 0.2

@@ -1,0 +1,54 @@
+"""Roofline analysis unit tests: HLO collective parsing + term math."""
+import numpy as np
+
+from repro.roofline import (HW, collective_bytes_from_hlo,
+                            parse_hlo_collectives, roofline_report)
+
+HLO = """
+HloModule jit_step
+%fused_computation { ... }
+%p0 = f32[128,256]{1,0} parameter(0)
+%convert_fusion.1 = bf16[128,256]{1,0} fusion(%p0), kind=kLoop
+%all-gather.1 = bf16[2048,256]{1,0} all-gather(%convert_fusion.1), channel_id=1, replica_groups=[16,16]<=[256]
+%ar.in = f32[64]{0} parameter(1)
+%all-reduce.2 = f32[64]{0} all-reduce(%ar.in), channel_id=2
+ROOT %tuple = (bf16[2048,256]{1,0}, f32[64]{0}) tuple(%all-gather.1, %all-reduce.2)
+"""
+
+
+def test_parse_collectives_operand_bytes():
+    out = parse_hlo_collectives(HLO)
+    # all-gather operand = bf16[128,256] = 65536 B (not the 16× result)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 128 * 256 * 2
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 64 * 4
+    assert collective_bytes_from_hlo(HLO) == 128 * 256 * 2 + 64 * 4
+
+
+def test_parse_collectives_inline_types():
+    hlo = "%ar = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %x), channel_id=1"
+    out = parse_hlo_collectives(hlo)
+    assert out["all-reduce"]["bytes"] == 8 * 8 * 4
+
+
+def test_roofline_terms_and_dominance():
+    rep = roofline_report(flops=197e12 * 256, bytes_accessed=819e9 * 256,
+                          collective_bytes=50e9 * 256 * 3, chips=256,
+                          model_flops=197e12 * 256 / 2)
+    assert abs(rep["t_compute_s"] - 1.0) < 1e-9
+    assert abs(rep["t_memory_s"] - 1.0) < 1e-9
+    assert abs(rep["t_collective_s"] - 3.0) < 1e-9
+    assert rep["dominant"] == "collective"
+    assert abs(rep["useful_flops_ratio"] - 0.5) < 1e-9
+    # roofline fraction: useful compute time / bound time
+    assert abs(rep["roofline_fraction"] - 0.5 / 3.0) < 1e-9
+
+
+def test_start_done_pairs_not_double_counted():
+    hlo = """
+%ag-start = (f32[8]{0}, f32[128]{0}) all-gather-start(%x), channel_id=5
+%ag-done = f32[128]{0} all-gather-done(%ag-start)
+"""
+    out = parse_hlo_collectives(hlo)
+    assert out["all-gather"]["count"] == 1

@@ -1,0 +1,50 @@
+"""Pallas SSD intra-chunk kernel vs the pure-jnp chunked reference and
+the naive sequential recurrence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ssd_chunk import ssd_forward_pallas
+from repro.models import ssm as ssm_mod
+
+
+def _rand(l, b=2, h=4, p=16, g=2, n=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32),
+            jnp.asarray(rng.uniform(0.01, 0.2, size=(b, l, h)),
+                        jnp.float32),
+            jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32))
+
+
+@pytest.mark.parametrize("l,chunk", [(32, 8), (64, 16), (50, 16),
+                                     (128, 32)])
+def test_ssd_kernel_matches_reference(l, chunk):
+    x, dt, A, B, C = _rand(l, seed=l)
+    y_k, st_k = ssd_forward_pallas(x, dt, A, B, C, chunk, interpret=True)
+    y_r, st_r = ssm_mod.ssd_forward(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_dtypes(dtype):
+    x, dt, A, B, C = _rand(64, seed=7)
+    x2, B2, C2 = x.astype(dtype), B.astype(dtype), C.astype(dtype)
+    y_k, st_k = ssd_forward_pallas(x2, dt, A, B2, C2, 16, interpret=True)
+    y_r, st_r = ssm_mod.ssd_forward(x, dt, A, B, C, 16)
+    tol = 3e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r), rtol=tol, atol=tol)
+
+
+def test_ssd_kernel_chunk_shape_invariance():
+    x, dt, A, B, C = _rand(96, seed=9)
+    y8, _ = ssd_forward_pallas(x, dt, A, B, C, 8, interpret=True)
+    y32, _ = ssd_forward_pallas(x, dt, A, B, C, 32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                               rtol=2e-3, atol=2e-3)
