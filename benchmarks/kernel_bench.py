@@ -5,6 +5,12 @@ interpret-mode Pallas timings are not hardware-representative; what we
 record is (a) the jnp reference wall time on this host, (b) the kernel's
 analytic VMEM/MXU utilization on the v5e target (bytes per tile vs VMEM,
 FLOPs per byte streamed).
+
+``run_multi`` covers the multi-output (k = c) path: the XLA einsum
+reference (which materializes the O(c·n·m) ``XF`` tensor) vs the
+streaming Pallas kernel (3-tile working set per grid step), with the
+analytic peak-memory estimate for each — the numbers behind
+EXPERIMENTS.md §Perf's client-memory table.
 """
 from __future__ import annotations
 
@@ -14,10 +20,64 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import gram_stats_multi, ref
 from repro.roofline import HW
 
 from . import common
+
+
+def _time(f, *args, reps: int = 3) -> float:
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _einsum_multi(X, Fp, Db):
+    XF = jnp.einsum("nm,nc->cnm", X, Fp)
+    G = jnp.einsum("cnm,cnp->cmp", XF, XF)
+    mv = X.T @ (Fp * Fp * Db)
+    return G, mv
+
+
+def run_multi(time_pallas: bool = False):
+    """Multi-output cases: c ∈ {1, 10, 100}, einsum vs streaming kernel.
+
+    On the CPU container the kernel runs in interpret mode, so its wall
+    time is only measured when asked (``time_pallas=True``, small shapes);
+    the load-bearing columns are the peak-memory estimates, which are
+    shape arithmetic and hold on any backend.
+    """
+    bm, bn = 128, 512
+    rows = []
+    for n, m, c in [(4096, 128, 1), (4096, 128, 10), (4096, 128, 100),
+                    (1024, 192, 10)]:
+        rng = np.random.default_rng(hash((n, m, c)) % 2**31)
+        X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        Fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n, c)), jnp.float32)
+        Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+
+        xla_us = _time(jax.jit(_einsum_multi), X, Fp, Db)
+        pallas_us = float("nan")
+        if time_pallas:
+            pallas_us = _time(
+                lambda a, b, d: gram_stats_multi(a, b, d, interpret=True),
+                X, Fp, Db, reps=1)
+
+        # peak transient memory (MB), excluding the (c, m, m) output both
+        # paths must produce: einsum holds the full (c, n, m) XF tensor;
+        # the kernel holds 3 (bn, bm)/(bm, bm) VMEM tiles + 2 vectors.
+        xla_peak = 4.0 * c * n * m / 1e6
+        kernel_peak = 4.0 * (2 * bn * bm + bm * bm + 2 * bn) / 1e6
+        rows.append([f"{n}x{m}", c, round(xla_us, 1),
+                     round(pallas_us, 1) if time_pallas else "",
+                     round(xla_peak, 2), round(kernel_peak, 3),
+                     round(xla_peak / kernel_peak, 1)])
+    return common.write_csv(
+        "kernel_bench_multi.csv",
+        ["shape", "c", "xla_us_per_call", "pallas_interpret_us",
+         "xla_peak_mb", "kernel_peak_mb", "memory_ratio"], rows)
 
 
 def run():
@@ -27,12 +87,7 @@ def run():
         X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
         fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n,)), jnp.float32)
         db = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
-        f = jax.jit(ref.gram_stats_ref)
-        jax.block_until_ready(f(X, fp, db))
-        t0 = time.perf_counter()
-        for _ in range(3):
-            jax.block_until_ready(f(X, fp, db))
-        us = (time.perf_counter() - t0) / 3 * 1e6
+        us = _time(jax.jit(ref.gram_stats_ref), X, fp, db)
 
         # analytic kernel roofline on v5e (bm=128, bn=512 tiles)
         bm, bn = 128, 512
@@ -53,3 +108,4 @@ def run():
 
 if __name__ == "__main__":
     run()
+    run_multi()

@@ -36,6 +36,7 @@ def main():
     table3_accuracy.run(args.scale)
     print("== Kernel micro-bench ==")
     kernel_bench.run()
+    kernel_bench.run_multi()
     print("== Roofline table (from dry-run artifacts) ==")
     roofline_table.run()
     print(f"[bench] all done in {time.time() - t0:.1f}s")

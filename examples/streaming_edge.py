@@ -3,13 +3,19 @@ low-power devices; each client folds chunks into O(m·r) running
 statistics and uploads once — the coordinator still recovers the exact
 centralized model.
 
+Both wire formats are shown: the paper's SVD statistics
+(``StreamingClient``, per-chunk Iwen–Ong merge) and the gram wire
+(``StreamingGramClient``, chunks stream through the fused Pallas kernel
+and merge by addition — no per-chunk SVD, DESIGN.md §3.2).
+
     PYTHONPATH=src python examples/streaming_edge.py
 """
 import numpy as np
 
-from repro.core import (activations, centralized_solve_gram, merge_many,
-                        predict_labels, solve_weights)
-from repro.core.streaming import StreamingClient
+from repro.core import (activations, centralized_solve_gram, merge_gram,
+                        merge_many, predict_labels, solve_weights,
+                        solve_weights_gram)
+from repro.core.streaming import StreamingClient, StreamingGramClient
 from repro.data import synthetic
 from repro.energy import watt_hours
 
@@ -39,3 +45,21 @@ print(f"\nstreamed federated accuracy {acc:.4f} | centralized {acc_c:.4f}"
       f" | max ΔW = "
       f"{float(np.abs(np.asarray(W) - np.asarray(W_c)).max()):.2e}")
 assert abs(acc - acc_c) < 1e-6
+
+# --- same round on the gram wire: additive merge, no per-chunk SVD -------
+gclients = []
+for s in shards:
+    g = StreamingGramClient(act="logistic", backend="pallas")
+    for chunk in np.array_split(s, chunks_per_client):
+        g.ingest(Xtr[chunk], D[chunk])
+    gclients.append(g)
+agg = gclients[0].upload()
+for g in gclients[1:]:
+    agg = merge_gram(agg, g.upload())
+W_g = solve_weights_gram(agg, 1e-3)
+acc_g = float((np.asarray(predict_labels(W_g, Xte, act="logistic"))
+               == yte).mean())
+print(f"gram-wire federated accuracy {acc_g:.4f} | on-device state "
+      f"{gclients[0].memory_floats} floats "
+      f"({gclients[0].memory_floats * 4 / 1024:.1f} KB)")
+assert abs(acc_g - acc_c) < 1e-6

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + one interpret-mode kernel parity check.
+#
+#   scripts/ci_smoke.sh
+#
+# Runs from any cwd; everything executes relative to the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# tier-1 verify (ROADMAP.md)
+python -m pytest -x -q
+
+# one explicit interpret-mode Pallas parity test: the multi-output
+# streaming Gram kernel vs the XLA einsum path at the acceptance shape
+python -m pytest -x -q tests/test_kernels.py::test_gram_stats_multi_acceptance_shape
+
+echo "ci_smoke: OK"

@@ -1,6 +1,8 @@
 """Paper core: single-round analytic federated learning for one-layer NNs."""
 from . import activations, federated, head, sharded, solver
-from .federated import FedONNClient, FedONNCoordinator, fed_fit, fed_fit_timed
+from .federated import (FedONNClient, FedONNCoordinator,
+                        FedONNGramCoordinator, fed_fit, fed_fit_timed)
+from .streaming import StreamingClient, StreamingGramClient
 from .solver import (ClientStats, GramStats, centralized_solve_gram,
                      client_gram_stats, client_stats, merge_gram, merge_many,
                      merge_stats, predict, predict_labels, solve_weights,
@@ -8,7 +10,9 @@ from .solver import (ClientStats, GramStats, centralized_solve_gram,
 
 __all__ = [
     "activations", "federated", "head", "sharded", "solver",
-    "FedONNClient", "FedONNCoordinator", "fed_fit", "fed_fit_timed",
+    "FedONNClient", "FedONNCoordinator", "FedONNGramCoordinator",
+    "fed_fit", "fed_fit_timed",
+    "StreamingClient", "StreamingGramClient",
     "ClientStats", "GramStats", "centralized_solve_gram",
     "client_gram_stats", "client_stats", "merge_gram", "merge_many",
     "merge_stats", "predict", "predict_labels", "solve_weights",

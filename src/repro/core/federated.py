@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import solver
-from .solver import ClientStats
+from .solver import ClientStats, GramStats
 
 
 @dataclasses.dataclass
@@ -27,6 +27,16 @@ class FedONNClient:
 
     def compute(self) -> ClientStats:
         return solver.client_stats(self.X, self.d, self.act)
+
+    def compute_gram(self, backend: str = "xla") -> GramStats:
+        """Eq.-3 statistics for the gram wire (see EXPERIMENTS.md §Perf).
+
+        ``backend="pallas"`` streams the local data through the fused
+        kernel — the bounded-memory edge path (O(c·m²) output, no
+        O(c·n·m) intermediate).
+        """
+        return solver.client_gram_stats(self.X, self.d, self.act,
+                                        backend=backend)
 
 
 class FedONNCoordinator:
@@ -80,9 +90,53 @@ class FedONNCoordinator:
         return solver.solve_weights(self._agg, self.lam)
 
 
+class FedONNGramCoordinator:
+    """Aggregation server on the eq.-3 gram wire.
+
+    Same admission semantics as :class:`FedONNCoordinator`, but the merge
+    is elementwise addition (exactly associative/commutative — no
+    tree-vs-sequential distinction to test, any order gives bit-identical
+    sums up to fp addition reordering). See EXPERIMENTS.md §Perf for when
+    this wire beats the paper's SVD wire.
+    """
+
+    def __init__(self, lam: float = 1e-3):
+        self.lam = lam
+        self._agg: Optional[GramStats] = None
+        self.rounds = 0
+
+    def add(self, stats: GramStats) -> None:
+        self._agg = stats if self._agg is None else \
+            solver.merge_gram(self._agg, stats)
+        self.rounds = 1
+
+    def add_many(self, stats_list: Sequence[GramStats]) -> None:
+        for st in stats_list:
+            self.add(st)
+
+    def solve(self) -> jnp.ndarray:
+        if self._agg is None:
+            raise RuntimeError("no client statistics aggregated yet")
+        return solver.solve_weights_gram(self._agg, self.lam)
+
+
 def fed_fit(parts_X: Sequence, parts_d: Sequence, act: str = "logistic",
-            lam: float = 1e-3, tree: bool = True) -> jnp.ndarray:
-    """End-to-end single-round federated fit over P client partitions."""
+            lam: float = 1e-3, tree: bool = True, wire: str = "svd",
+            backend: str = "xla") -> jnp.ndarray:
+    """End-to-end single-round federated fit over P client partitions.
+
+    ``wire="svd"`` is the paper's eq.-5 representation; ``wire="gram"``
+    publishes the eq.-3 Gram instead (additive merge; ``backend``
+    selects the client-side statistics path, see
+    ``solver.client_gram_stats``).
+    """
+    if wire not in ("svd", "gram"):
+        raise ValueError(f"unknown wire {wire!r} (expected 'svd'|'gram')")
+    if wire == "gram":
+        coord_g = FedONNGramCoordinator(lam=lam)
+        coord_g.add_many([FedONNClient(X, d, act).compute_gram(backend)
+                          for X, d in zip(parts_X, parts_d)])
+        return coord_g.solve()
     coord = FedONNCoordinator(lam=lam)
     stats = [FedONNClient(X, d, act).compute() for X, d in
              zip(parts_X, parts_d)]
@@ -111,17 +165,33 @@ class TimedFit:
 
 
 def fed_fit_timed(parts_X, parts_d, act="logistic", lam=1e-3,
-                  tree=True) -> TimedFit:
+                  tree=True, wire: str = "svd",
+                  backend: str = "xla") -> TimedFit:
+    """Timed fit on either wire format.
+
+    ``wire="gram"`` times the eq.-3 path: client statistics through
+    ``compute_gram(backend)`` (``backend="pallas"`` = the fused streaming
+    kernel) and an additive coordinator — the energy-model numbers for
+    the wire comparison in EXPERIMENTS.md §Perf.
+    """
+    if wire not in ("svd", "gram"):
+        raise ValueError(f"unknown wire {wire!r} (expected 'svd'|'gram')")
+    gram = wire == "gram"
     stats, times = [], []
     for X, d in zip(parts_X, parts_d):
+        client = FedONNClient(X, d, act)
         t0 = time.perf_counter()
-        st = FedONNClient(X, d, act).compute()
-        jax.block_until_ready(st.U)
+        st = client.compute_gram(backend) if gram else client.compute()
+        jax.block_until_ready(st.G if gram else st.U)
         times.append(time.perf_counter() - t0)
         stats.append(st)
-    coord = FedONNCoordinator(lam=lam)
+    coord = FedONNGramCoordinator(lam=lam) if gram else \
+        FedONNCoordinator(lam=lam)
     t0 = time.perf_counter()
-    coord.add_many(stats, tree=tree)
+    if gram:
+        coord.add_many(stats)
+    else:
+        coord.add_many(stats, tree=tree)
     W = coord.solve()
     jax.block_until_ready(W)
     t_coord = time.perf_counter() - t0

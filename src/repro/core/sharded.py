@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import solver
+from ..sharding import shard_map_compat
 
 
 def _local_stats(X, D, act):
@@ -54,26 +55,39 @@ def fed_fit_sharded(X, D, act="logistic", lam: float = 1e-3, *,
                                     n=jax.lax.psum(st.n, axis))
         return solver.solve_weights(merged, lam)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(P(axis, None), P(axis, None)),
-                       out_specs=P(None, None), check_vma=False)
+    fn = shard_map_compat(shard_fn, mesh=mesh,
+                          in_specs=(P(axis, None), P(axis, None)),
+                          out_specs=P(None, None))
     return fn(jnp.asarray(X), _as_2d(D))
 
 
 def fed_fit_sharded_gram(X, D, act="logistic", lam: float = 1e-3, *,
-                         mesh: Mesh, axis: str = "data") -> jnp.ndarray:
-    """Beyond-paper wire format: psum the eq.-3 Gram stats instead."""
+                         mesh: Mesh, axis: str = "data",
+                         backend: str | None = None) -> jnp.ndarray:
+    """Beyond-paper wire format: psum the eq.-3 Gram stats instead.
+
+    ``backend`` picks the local-statistics path (see
+    ``solver.client_gram_stats``): ``None`` resolves to the fused Pallas
+    kernel on TPU (streamed, 3-tile working set) and the XLA einsum on
+    other backends, where interpret-mode Pallas inside shard_map would
+    only cost time; pass ``"pallas"`` explicitly to force the kernel
+    (interpret mode off-TPU) end to end.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+
     def shard_fn(Xs, Ds):
-        st = solver.client_gram_stats(Xs, Ds, act=act, add_bias=True)
+        st = solver.client_gram_stats(Xs, Ds, act=act, add_bias=True,
+                                      backend=backend)
         G = jax.lax.psum(st.G, axis)
         m_vec = jax.lax.psum(st.m_vec, axis)
         n = jax.lax.psum(st.n, axis)
         return solver.solve_weights_gram(
             solver.GramStats(G=G, m_vec=m_vec, n=n), lam)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(P(axis, None), P(axis, None)),
-                       out_specs=P(None, None), check_vma=False)
+    fn = shard_map_compat(shard_fn, mesh=mesh,
+                          in_specs=(P(axis, None), P(axis, None)),
+                          out_specs=P(None, None))
     return fn(jnp.asarray(X), _as_2d(D))
 
 
@@ -94,15 +108,17 @@ def choose_wire(P: int, m: int, r: int) -> str:
 
 
 def fed_fit_sharded_auto(X, D, act="logistic", lam: float = 1e-3, *,
-                         mesh: Mesh, axis: str = "data") -> jnp.ndarray:
+                         mesh: Mesh, axis: str = "data",
+                         backend: str | None = None) -> jnp.ndarray:
     """fed_fit_sharded with the wire format chosen by transit cost."""
     P_ = mesh.shape[axis]
     n_local = X.shape[0] // P_
     m = X.shape[1] + 1  # bias
     r = min(m, n_local)
-    fit = fed_fit_sharded if choose_wire(P_, m, r) == "svd" \
-        else fed_fit_sharded_gram
-    return fit(X, D, act=act, lam=lam, mesh=mesh, axis=axis)
+    if choose_wire(P_, m, r) == "svd":
+        return fed_fit_sharded(X, D, act=act, lam=lam, mesh=mesh, axis=axis)
+    return fed_fit_sharded_gram(X, D, act=act, lam=lam, mesh=mesh,
+                                axis=axis, backend=backend)
 
 
 def make_client_mesh(n_clients_axis: int | None = None) -> Mesh:

@@ -159,8 +159,46 @@ class GramStats(NamedTuple):
 
 
 def client_gram_stats(X, D, act="logistic", add_bias: bool = True,
-                      dtype=jnp.float32) -> GramStats:
+                      dtype=jnp.float32, backend: str = "xla",
+                      interpret: Optional[bool] = None) -> GramStats:
+    """Eq.-3 sufficient statistics of one client's local data.
+
+    ``backend`` selects how the per-output Gram stack is computed:
+
+    * ``"xla"``    — einsum reference. Simple, but the nonlinear path
+      materializes the O(c·n·m) tensor ``XF`` — fine on a server, the
+      memory blowup the paper's edge story forbids on-device.
+    * ``"pallas"`` — the fused streaming kernel
+      (``kernels.gram_stats_multi``): the sample axis streams HBM→VMEM,
+      working set 3 tiles per class, never O(c·n·m). ``interpret`` defaults
+      by backend (interpret-mode off-TPU so tests run anywhere). The
+      kernel accumulates in float32, so non-float32 ``dtype`` requests
+      (e.g. fp64 exactness tests) fall back to the XLA path, which honors
+      ``dtype`` end to end.
+    """
     X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
+    if backend == "pallas" and jnp.dtype(dtype) != jnp.float32:
+        backend = "xla"
+    if backend == "pallas":
+        from ..kernels import ops as _kops
+        if act.name == "identity":
+            # shared F = I: one kernel pass builds the Gram; the moment
+            # needs every output column, so it is recomputed densely in
+            # XLA (O(n·m·c), no blowup) rather than fused — the kernel's
+            # single-column moment output is discarded. A c-column fused
+            # identity variant would save one extra read of X.
+            ones = jnp.ones((X.shape[0], 1), X.dtype)
+            G, _ = _kops.client_gram_stats_fused(X, d_bar[:, :1], ones,
+                                                 interpret=interpret)
+            return GramStats(G=G.astype(dtype),
+                             m_vec=(X.T @ d_bar).astype(dtype),
+                             n=jnp.asarray(X.shape[0], dtype))
+        G, m_vec = _kops.client_gram_stats_fused(X, d_bar, fp,
+                                                 interpret=interpret)
+        return GramStats(G=G.astype(dtype), m_vec=m_vec.astype(dtype),
+                         n=jnp.asarray(X.shape[0], dtype))
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
     m_vec = X.T @ (fp * fp * d_bar)
     if act.name == "identity":
         G = (X.T @ X)[None]

@@ -17,7 +17,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from . import solver
-from .solver import ClientStats
+from .solver import ClientStats, GramStats
 
 
 @dataclasses.dataclass
@@ -47,3 +47,48 @@ class StreamingClient:
         if st is None:
             return 0
         return int(st.U.size + st.s.size + st.m_vec.size)
+
+
+@dataclasses.dataclass
+class StreamingGramClient:
+    """Edge client on the eq.-3 Gram wire: chunks fold through the fused
+    Pallas kernel and merge by plain addition.
+
+    Unlike :class:`StreamingClient` there is no per-chunk SVD — the merge
+    is ``G += G_chunk; m += m_chunk`` (exactly associative, so chunk order
+    and sizes are irrelevant, not just equivalent up to rounding). Resident
+    state is the (k, m, m) Gram stack plus the (m, c) moment: O(c·m²)
+    floats no matter how much data streams through, and with
+    ``backend="pallas"`` no chunk ever materializes the O(c·n·m)
+    intermediate either (DESIGN.md §3.2) — bounded memory end to end.
+    """
+    act: str = "logistic"
+    dtype: object = jnp.float32
+    backend: str = "pallas"
+    _stats: Optional[GramStats] = None
+    n_seen: int = 0
+
+    def ingest(self, X_chunk, d_chunk) -> None:
+        new = solver.client_gram_stats(X_chunk, d_chunk, act=self.act,
+                                       dtype=self.dtype,
+                                       backend=self.backend)
+        self._stats = new if self._stats is None else \
+            solver.merge_gram(self._stats, new)
+        self.n_seen += X_chunk.shape[0]
+
+    def upload(self) -> GramStats:
+        if self._stats is None:
+            raise RuntimeError("no data ingested")
+        return self._stats
+
+    def solve(self, lam: float = 1e-3) -> jnp.ndarray:
+        """Local model from the running statistics (no upload needed)."""
+        return solver.solve_weights_gram(self.upload(), lam)
+
+    @property
+    def memory_floats(self) -> int:
+        """Footprint of the running statistics (the O(c·m²) bound)."""
+        st = self._stats
+        if st is None:
+            return 0
+        return int(st.G.size + st.m_vec.size)

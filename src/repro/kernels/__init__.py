@@ -1,4 +1,4 @@
 from . import ops, ref
-from .gram_stats import gram_stats
+from .gram_stats import gram_stats, gram_stats_multi
 from .decode_attn import decode_gqa
 from .ssd_chunk import ssd_chunk, ssd_forward_pallas

@@ -16,6 +16,18 @@ at any size — the green-FL story on TPU).
 
 The moment vector reuses the already-resident X tile (j == 0 column of the
 grid), which is what "fused" buys over two separate passes.
+
+Two kernels share this mapping:
+
+* ``gram_stats``       — the shared-F path (identity activation, k == 1):
+  one (m, m) Gram and one (m,) moment serve every output column.
+* ``gram_stats_multi`` — the per-output path (nonlinear activations,
+  k == c): grid = (c, mi, mj, nk) with a *leading output-class dimension*
+  (DESIGN.md §3.2). Each class step re-streams X but scales it by its own
+  f'(d̄_{:,cls}) column, so one pallas_call emits the full (c, m, m) Gram
+  stack and (m, c) moment block while the VMEM working set stays at 3
+  tiles per grid step — never the O(c·n·m) intermediate that the XLA
+  ``einsum("nm,nc->cnm", ...)`` reference path materializes.
 """
 from __future__ import annotations
 
@@ -97,3 +109,82 @@ def gram_stats(X, fp, dbar, *, bm: int = 128, bn: int = 512,
         interpret=interpret,
     )(X, X, fp2, dbar2)
     return G[:m, :m], mvec[:m, 0]
+
+
+def _kernel_multi(x_i_ref, x_j_ref, fp_ref, dbar_ref, g_ref, m_ref):
+    nk = pl.program_id(3)
+    j = pl.program_id(2)
+
+    @pl.when(nk == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    # the (cls, i) moment tile is revisited at every j with nk == 0 — only
+    # the j == 0 pass may initialize it (same hazard as the k=1 kernel)
+    @pl.when((nk == 0) & (j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    fp = fp_ref[...].astype(jnp.float32)          # (bn, 1): column cls of Fp
+    xi = x_i_ref[...].astype(jnp.float32)         # (bn, bm)
+    xj = x_j_ref[...].astype(jnp.float32)
+    xfi = xi * fp
+    xfj = xj * fp
+    g_ref[0] += jax.lax.dot_general(
+        xfi, xfj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _moment():
+        w = fp * fp * dbar_ref[...].astype(jnp.float32)   # (bn, 1)
+        m_ref[...] += jax.lax.dot_general(
+            xi, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gram_stats_multi(X, Fp, Dbar, *, bm: int = 128, bn: int = 512,
+                     interpret: bool = False):
+    """Multi-output fused statistics: X (n, m); Fp, Dbar (n, c).
+
+    Returns ``(G (c, m, m), mvec (m, c))`` in float32, where
+    ``G[k] = (X·diag(Fp[:, k]))ᵀ (X·diag(Fp[:, k]))`` and
+    ``mvec[:, k] = Xᵀ (Fp[:, k]² ⊙ Dbar[:, k])`` — the eq.-3 sufficient
+    statistics for every output class in one pallas_call.
+
+    Grid = (c, mi, mj, nk), class outermost (DESIGN.md §3.2): X tiles are
+    re-streamed per class with the per-class fp/d̄ column selected by the
+    leading grid index, so VMEM holds 3 tiles + one (bm, bm) accumulator
+    at any step regardless of n or c. Padding n, m to tile multiples is
+    exact (zero rows/cols contribute nothing to either statistic).
+    """
+    n, m = X.shape
+    c = Fp.shape[1]
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    if (mp, np_) != (m, n):
+        X = jnp.pad(X, ((0, np_ - n), (0, mp - m)))
+        Fp = jnp.pad(Fp, ((0, np_ - n), (0, 0)))
+        Dbar = jnp.pad(Dbar, ((0, np_ - n), (0, 0)))
+    gi, gj, gk = mp // bm, mp // bm, np_ // bn
+
+    G, mvec = pl.pallas_call(
+        _kernel_multi,
+        grid=(c, gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda cls, i, j, k: (k, i)),
+            pl.BlockSpec((bn, bm), lambda cls, i, j, k: (k, j)),
+            pl.BlockSpec((bn, 1), lambda cls, i, j, k: (k, cls)),
+            pl.BlockSpec((bn, 1), lambda cls, i, j, k: (k, cls)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bm), lambda cls, i, j, k: (cls, i, j)),
+            pl.BlockSpec((bm, 1), lambda cls, i, j, k: (i, cls)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, X, Fp, Dbar)
+    return G[:, :m, :m], mvec[:m, :]

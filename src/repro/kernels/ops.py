@@ -22,14 +22,16 @@ def client_gram_stats_fused(X, D_bar, Fp, *, interpret=None):
 
     X: (n, m) with bias column; D_bar: (n, c) pre-activation targets;
     Fp: (n, c) per-output diagonal of F. Returns (G (c, m, m), mvec (m, c)).
+
+    One pallas_call with a leading class grid dimension (DESIGN.md §3.2);
+    the c == 1 shared-F case takes the plain k=1 kernel.
     """
     interpret = _default_interpret() if interpret is None else interpret
-
-    def one(fp_k, dbar_k):
-        return _gram.gram_stats(X, fp_k, dbar_k, interpret=interpret)
-
-    G, mv = jax.vmap(one, in_axes=(1, 1))(Fp, D_bar)
-    return G, mv.T
+    if Fp.ndim == 2 and Fp.shape[1] == 1:
+        G, mv = _gram.gram_stats(X, Fp[:, 0], D_bar[:, 0],
+                                 interpret=interpret)
+        return G[None], mv[:, None]
+    return _gram.gram_stats_multi(X, Fp, D_bar, interpret=interpret)
 
 
 def decode_gqa(q, k, v, kv_len, *, interpret=None, block_s: int = 512):

@@ -25,8 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro import configs                                   # noqa: E402
 from repro.launch import mesh as mesh_lib                   # noqa: E402
 from repro.models import build_model, param_count           # noqa: E402
-from repro.roofline import (HW, parse_hlo_collectives,      # noqa: E402
-                            roofline_report)
+from repro.roofline import (HW, cost_analysis_dict,         # noqa: E402
+                            parse_hlo_collectives, roofline_report)
 from repro.sharding import specs as sh                      # noqa: E402
 from repro.train import init_train_state, make_train_step   # noqa: E402
 
@@ -161,7 +161,7 @@ def _lower_one(cfg, shape, kind, mesh, rules, cache_rules=None,
 def _cost_of(compiled) -> Dict[str, float]:
     """Per-device cost terms (XLA cost_analysis reports per-partition
     values with the 2mnk dot convention — calibrated, see EXPERIMENTS.md)."""
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     colls = parse_hlo_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

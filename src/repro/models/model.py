@@ -83,7 +83,8 @@ def _build_decoder(cfg) -> Model:
         x, positions = _inputs(params, batch)
         h, aux = transformer.apply_stack(params["params"], x, cfg,
                                          positions=positions,
-                                         remat=training)
+                                         remat=training,
+                                         infer=not training)
         return h, aux
 
     def forward(params, batch, training=False):

@@ -44,18 +44,25 @@ def _group_size(T: int) -> int:
     return T
 
 
-def apply_moe(x, p, cfg, *, capacity_factor=None) -> Tuple[jnp.ndarray, Dict]:
-    """x: (b, s, d) → (out, aux) with aux = {lb_loss, z_loss, fraction_dropped}."""
+def apply_moe(x, p, cfg, *, capacity_factor=None,
+              dropless: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """x: (b, s, d) → (out, aux) with aux = {lb_loss, z_loss, fraction_dropped}.
+
+    ``dropless=True`` sets capacity = group size exactly (no token can
+    overflow, whatever the router does) — the inference mode. Encoding it
+    through a capacity_factor would be fragile: ``int(g*K/E * E/K)`` can
+    truncate to g-1 for non-power-of-two (E, K).
+    """
     b, s, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    cf = capacity_factor or cfg.capacity_factor
+    cf = cfg.capacity_factor if capacity_factor is None else capacity_factor
     T = b * s
     xt = x.reshape(T, d)
     # cost-model variants process one giant group: the group scan's body is
     # counted once by XLA cost_analysis, so unrolled variants must not scan
     g = T if cfg.unroll_layers else _group_size(T)
     G = T // g
-    C = max(int(g * K / E * cf), 1)
+    C = g if dropless else max(int(g * K / E * cf), 1)
 
     logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
                         p["router"].astype(jnp.float32))

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.specs import axis_size, current_rules
+from repro.sharding.specs import axis_size, current_rules, shard_map_compat
 from .layers import cast
 
 
@@ -52,9 +52,11 @@ def ep_applicable(x, cfg) -> bool:
     return t_loc % tp == 0 and t_loc // tp >= 1
 
 
-def apply_moe_ep(x, p, cfg) -> Tuple[jnp.ndarray, Dict]:
+def apply_moe_ep(x, p, cfg, *, dropless: bool = False
+                 ) -> Tuple[jnp.ndarray, Dict]:
     """x: (b, s, d) global. Returns (out, aux). Call only if
-    ep_applicable(x, cfg)."""
+    ep_applicable(x, cfg). ``dropless=True``: capacity = local token
+    count (inference mode, same contract as ``apply_moe``)."""
     mesh, rules = current_rules()
     tp_axes = tuple(rules["experts"])
     baxes = tuple(rules["batch"])
@@ -68,7 +70,7 @@ def apply_moe_ep(x, p, cfg) -> Tuple[jnp.ndarray, Dict]:
         b_loc, s, d = xl.shape
         T = b_loc * s
         tl = T // tp
-        C = max(int(tl * K / E * cf), 1)
+        C = tl if dropless else max(int(tl * K / E * cf), 1)
         t = xl.reshape(T, d)
         mi = jax.lax.axis_index(ax)
         ts = jax.lax.dynamic_slice_in_dim(t, mi * tl, tl, 0)   # my slice
@@ -131,9 +133,9 @@ def apply_moe_ep(x, p, cfg) -> Tuple[jnp.ndarray, Dict]:
 
     bspec = P(baxes if len(baxes) > 1 else baxes[0], None, None)
     espec = P(ax, None, None)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         inner, mesh=mesh,
         in_specs=(bspec, P(None, None), espec, espec, espec),
-        out_specs=(bspec, P()), check_vma=False)
+        out_specs=(bspec, P()))
     return fn(x, p["router"].astype(jnp.float32), cast(p["experts_wi"]),
               cast(p["experts_wg"]), cast(p["experts_wd"]))

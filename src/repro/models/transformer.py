@@ -97,16 +97,22 @@ def init_stack(key, cfg) -> Dict:
     return {"positions": positions, "final_norm": init_norm(key, cfg)}
 
 
-def _ffn(x_normed, lp, cfg, ffn_kind):
+def _ffn(x_normed, lp, cfg, ffn_kind, infer: bool = False):
     if ffn_kind == "moe":
         from . import moe_ep
+        # inference runs dropless (capacity = group size): capacity
+        # dropping is a training-time load-balance regularizer, and drops
+        # that depend on the total token count would make prefill/decode
+        # logits diverge from the full forward pass on the shared prefix
         if moe_ep.ep_applicable(x_normed, cfg):
-            return moe_ep.apply_moe_ep(x_normed, lp["ffn"], cfg)
-        return moe_mod.apply_moe(x_normed, lp["ffn"], cfg)
+            return moe_ep.apply_moe_ep(x_normed, lp["ffn"], cfg,
+                                       dropless=infer)
+        return moe_mod.apply_moe(x_normed, lp["ffn"], cfg, dropless=infer)
     return apply_mlp(x_normed, lp["ffn"], cfg), dict(AUX0)
 
 
-def _block(x, lp, cfg, mixer_kind, ffn_kind, positions, causal=True):
+def _block(x, lp, cfg, mixer_kind, ffn_kind, positions, causal=True,
+           infer=False):
     """One layer: returns (x, aux)."""
     h = apply_norm(x, lp["norm1"], cfg)
     if mixer_kind == "attn":
@@ -117,16 +123,16 @@ def _block(x, lp, cfg, mixer_kind, ffn_kind, positions, causal=True):
     if ffn_kind == "none":
         return shd(x + mx, "batch", None, None), dict(AUX0)
     if cfg.parallel_block:
-        f, aux = _ffn(h, lp, cfg, ffn_kind)
+        f, aux = _ffn(h, lp, cfg, ffn_kind, infer=infer)
         return shd(x + mx + f, "batch", None, None), aux
     x = x + mx
     h2 = apply_norm(x, lp["norm2"], cfg)
-    f, aux = _ffn(h2, lp, cfg, ffn_kind)
+    f, aux = _ffn(h2, lp, cfg, ffn_kind, infer=infer)
     return shd(x + f, "batch", None, None), aux
 
 
 def apply_stack(params, x, cfg, *, positions=None, causal=True,
-                remat: bool = False):
+                remat: bool = False, infer: bool = False):
     """x: (b, s, d) → (hidden (b, s, d), aux)."""
     kinds = position_kinds(cfg)
 
@@ -134,7 +140,7 @@ def apply_stack(params, x, cfg, *, positions=None, causal=True,
         x, aux = carry
         for pos, (mk, fk) in enumerate(kinds):
             x, a = _block(x, period_params[pos], cfg, mk, fk, positions,
-                          causal)
+                          causal, infer)
             aux = {k: aux[k] + a[k] for k in aux}
         return (x, aux), None
 
@@ -207,12 +213,12 @@ def prefill_stack(params, x, cfg, *, positions=None, max_len=None):
             if fk == "none":
                 x = x + mx
             elif cfg.parallel_block:
-                f, _ = _ffn(h, lp, cfg, fk)
+                f, _ = _ffn(h, lp, cfg, fk, infer=True)
                 x = x + mx + f
             else:
                 x = x + mx
                 h2 = apply_norm(x, lp["norm2"], cfg)
-                f, _ = _ffn(h2, lp, cfg, fk)
+                f, _ = _ffn(h2, lp, cfg, fk, infer=True)
                 x = x + f
             x = shd(x, "batch", None, None)
         return x, tuple(new_caches)
@@ -245,12 +251,12 @@ def decode_stack(params, cache, x_t, cfg):
             if fk == "none":
                 x = x + mx
             elif cfg.parallel_block:
-                f, _ = _ffn(h, lp, cfg, fk)
+                f, _ = _ffn(h, lp, cfg, fk, infer=True)
                 x = x + mx + f
             else:
                 x = x + mx
                 h2 = apply_norm(x, lp["norm2"], cfg)
-                f, _ = _ffn(h2, lp, cfg, fk)
+                f, _ = _ffn(h2, lp, cfg, fk, infer=True)
                 x = x + f
         return x, tuple(new_caches)
 

@@ -11,6 +11,7 @@ Claims under test (paper §3–§4):
 """
 import numpy as np
 import jax
+from jax.experimental import enable_x64 as jax_enable_x64
 import jax.numpy as jnp
 import pytest
 
@@ -68,7 +69,7 @@ def test_iid_equals_noniid_fp32(act):
 def test_iid_equals_noniid_fp64_exact():
     # fp64: the algebraic claim — partitioning does not change the model
     X, y, _ = _toy(n=400)
-    with jax.enable_x64(True):
+    with jax_enable_x64(True):
         def fit(parts):
             stats = [client_stats(p[0].astype(np.float64),
                                   np.asarray(acts.encode_labels(p[1], 2),

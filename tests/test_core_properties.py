@@ -1,8 +1,14 @@
 """Hypothesis property tests on the solver's algebraic invariants."""
 import numpy as np
 import jax
+from jax.experimental import enable_x64 as jax_enable_x64
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need "
+    "hypothesis (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (centralized_solve_gram, client_stats, merge_many,
                         merge_stats, solve_weights)
@@ -35,7 +41,7 @@ def test_partition_invariance(n, m, c, P, lam, seed, act):
     X = rng.normal(size=(n, m))
     lo, hi = (0.1, 0.9) if act in ("logistic",) else (-0.8, 0.8)
     D = rng.uniform(lo, hi, size=(n, c))
-    with jax.enable_x64(True):
+    with jax_enable_x64(True):
         W_cen = centralized_solve_gram(X, D, act=act, lam=lam,
                                        dtype=jnp.float64)
         cuts = np.sort(rng.choice(np.arange(1, n), size=P - 1,
@@ -59,7 +65,7 @@ def test_merge_commutative_and_associative(n, m, seed):
     rng = np.random.default_rng(seed)
     X = rng.normal(size=(3 * n, m))
     D = rng.uniform(0.1, 0.9, size=(3 * n, 1))
-    with jax.enable_x64(True):
+    with jax_enable_x64(True):
         a, b, c = (client_stats(X[i * n:(i + 1) * n], D[i * n:(i + 1) * n],
                                 dtype=jnp.float64) for i in range(3))
         W_ab = solve_weights(merge_stats(a, b), 1e-3)
@@ -80,7 +86,7 @@ def test_wide_and_tall_clients(n, m, seed):
     rng = np.random.default_rng(seed)
     X = rng.normal(size=(n, m))
     D = rng.uniform(0.1, 0.9, size=(n, 1))
-    with jax.enable_x64(True):
+    with jax_enable_x64(True):
         W = solve_weights(client_stats(X, D, dtype=jnp.float64), 1e-3)
         W_cen = centralized_solve_gram(X, D, dtype=jnp.float64)
     assert W.shape == (m + 1, 1)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import gram_stats, decode_gqa
+from repro.kernels import gram_stats, gram_stats_multi, decode_gqa
 from repro.kernels import ops, ref
 
 
@@ -39,6 +39,58 @@ def test_gram_stats_block_shape_invariance(bm, bn):
                                rtol=1e-5, atol=1e-4)
     np.testing.assert_allclose(np.asarray(mv), np.asarray(mv_ref),
                                rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,c", [(64, 8, 2), (300, 50, 3), (257, 130, 4)])
+def test_gram_stats_multi_matches_ref(n, m, c):
+    """The (c, mi, mj, nk) grid kernel vs the per-class k=1 oracle."""
+    rng = np.random.default_rng(hash((n, m, c)) % 2**31)
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    Fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n, c)), jnp.float32)
+    Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    G, mv = gram_stats_multi(X, Fp, Db, interpret=True)
+    assert G.shape == (c, m, m) and mv.shape == (m, c)
+    assert G.dtype == jnp.float32 and mv.dtype == jnp.float32
+    for k in range(c):
+        Gr, mr = ref.gram_stats_ref(X, Fp[:, k], Db[:, k])
+        np.testing.assert_allclose(np.asarray(G[k]), np.asarray(Gr),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(mv[:, k]), np.asarray(mr),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_gram_stats_multi_acceptance_shape():
+    """ISSUE acceptance: (n=1024, m=192, c=10) logistic inputs must match
+    the XLA einsum path to ≤1e-4 max-abs."""
+    from repro.core import activations as acts
+    rng = np.random.default_rng(42)
+    n, m, c = 1024, 192, 10
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    y = rng.integers(0, c, size=n)
+    D = jnp.asarray(acts.encode_labels(y, c))
+    act = acts.get("logistic")
+    dbar = act.f_inv(D)
+    fp = act.f_prime(dbar)
+    G, mv = gram_stats_multi(X, fp, dbar, interpret=True)
+    XF = jnp.einsum("nm,nc->cnm", X, fp)
+    G_ref = jnp.einsum("cnm,cnp->cmp", XF, XF)
+    mv_ref = X.T @ (fp * fp * dbar)
+    assert float(jnp.abs(G - G_ref).max()) <= 1e-4
+    assert float(jnp.abs(mv - mv_ref).max()) <= 1e-4
+
+
+@pytest.mark.parametrize("bm,bn", [(128, 256), (256, 128)])
+def test_gram_stats_multi_block_shape_invariance(bm, bn):
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(500, 40)), jnp.float32)
+    Fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(500, 2)), jnp.float32)
+    Db = jnp.asarray(rng.normal(size=(500, 2)), jnp.float32)
+    G, mv = gram_stats_multi(X, Fp, Db, bm=bm, bn=bn, interpret=True)
+    G_ref, mv_ref = gram_stats_multi(X, Fp, Db, interpret=True)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mv_ref),
+                               rtol=1e-6, atol=1e-5)
 
 
 def test_gram_stats_multi_output_wrapper():

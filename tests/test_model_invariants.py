@@ -67,8 +67,11 @@ def test_moe_capacity_breaks_strict_causality():
     """Documented property, not a bug: with tight capacity, token-choice
     MoE drops are order-dependent — changing a later token can displace an
     earlier token's expert slot (the reason serving stacks use dropless
-    MoE or per-sequence dispatch). With ample capacity the model is
-    strictly causal (asserted in test_causality)."""
+    MoE or per-sequence dispatch). This only applies to the *training*
+    path: inference (``training=False``, prefill/decode) runs dropless
+    (capacity = group size), so eval forward, prefill, and decode agree on
+    shared prefixes. With ample capacity the model is strictly causal
+    (asserted in test_causality)."""
     import dataclasses
     cfg = dataclasses.replace(configs.get("olmoe-1b-7b", smoke=True),
                               capacity_factor=0.5)  # force overflow
@@ -76,11 +79,15 @@ def test_moe_capacity_breaks_strict_causality():
     params = model.init(jax.random.PRNGKey(0))
     batch = {k: jnp.asarray(v) for k, v in
              make_batch(cfg, 24, 2, seed=0).items()}
-    logits1, aux = model.forward(params, batch)
+    logits1, aux = model.forward(params, batch, training=True)
     assert float(aux["fraction_dropped"]) > 0
+    # the inference path is dropless even at this capacity factor
+    _, aux_inf = model.forward(params, batch)
+    assert abs(float(aux_inf["fraction_dropped"])) < 1e-6
     toks2 = batch["tokens"].at[:, -1].set(
         (batch["tokens"][:, -1] + 7) % cfg.vocab)
-    logits2, _ = model.forward(params, dict(batch, tokens=toks2))
+    logits2, _ = model.forward(params, dict(batch, tokens=toks2),
+                               training=True)
     # at least the shapes/finiteness hold; strict equality of the past is
     # NOT guaranteed under overflow — that is the point of this test
     assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())

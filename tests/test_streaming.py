@@ -1,6 +1,7 @@
 """Streaming-client equivalence (paper Fig. 1 + eq. 10)."""
 import numpy as np
 import jax
+from jax.experimental import enable_x64 as jax_enable_x64
 import jax.numpy as jnp
 
 from repro.core import activations as acts
@@ -14,7 +15,7 @@ def test_chunkwise_ingest_equals_batch():
     rng = np.random.default_rng(0)
     X = rng.normal(size=(300, 8)).astype(np.float32)
     D = rng.uniform(0.1, 0.9, size=(300, 2)).astype(np.float32)
-    with jax.enable_x64(True):
+    with jax_enable_x64(True):
         c = StreamingClient(act="logistic", dtype=jnp.float64)
         for lo in range(0, 300, 37):          # uneven chunks
             c.ingest(X[lo:lo + 37], D[lo:lo + 37])

@@ -1,0 +1,155 @@
+"""StreamingGramClient + solver backend switch: streaming-vs-batch
+equivalence on the eq.-3 gram wire (ISSUE 1 tentpole coverage).
+
+The gram merge is plain addition, so chunk-wise folding must reproduce the
+centralized solve to fp32 tolerance for any chunking — identity and
+logistic activations, both backends.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (centralized_solve_gram, client_gram_stats,
+                        fed_fit, fed_fit_timed, merge_gram,
+                        solve_weights_gram)
+from repro.core import activations as acts
+from repro.core.federated import FedONNGramCoordinator
+from repro.core.streaming import StreamingGramClient
+
+
+def _logistic_problem(n=300, m=9, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    y = rng.integers(0, c, size=n)
+    return X, np.asarray(acts.encode_labels(y, c))
+
+
+def _identity_problem(n=300, m=9, c=2, seed=1):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    D = rng.uniform(-0.8, 0.8, size=(n, c)).astype(np.float32)
+    return X, D
+
+
+@pytest.mark.parametrize("act,problem", [
+    ("logistic", _logistic_problem), ("identity", _identity_problem)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_streaming_gram_equals_centralized(act, problem, backend):
+    """Shuffled, uneven chunks through the kernel == one-shot solve."""
+    X, D = problem()
+    n = X.shape[0]
+    rng = np.random.default_rng(7)
+    bounds = np.sort(rng.choice(np.arange(1, n), size=5, replace=False))
+    client = StreamingGramClient(act=act, backend=backend)
+    for chunk in np.split(np.arange(n), bounds):
+        client.ingest(X[chunk], D[chunk])
+    W_stream = solve_weights_gram(client.upload(), 1e-3)
+    W_cen = centralized_solve_gram(X, D, act=act, lam=1e-3)
+    np.testing.assert_allclose(np.asarray(W_stream), np.asarray(W_cen),
+                               rtol=1e-4, atol=1e-5)
+    assert client.n_seen == n
+
+
+def test_streaming_gram_chunk_order_invariance():
+    """Additive merge: permuting chunk arrival changes nothing material."""
+    X, D = _logistic_problem(seed=3)
+    chunks = np.array_split(np.arange(X.shape[0]), 6)
+    a = StreamingGramClient(backend="pallas")
+    b = StreamingGramClient(backend="pallas")
+    for ch in chunks:
+        a.ingest(X[ch], D[ch])
+    for ch in reversed(chunks):
+        b.ingest(X[ch], D[ch])
+    np.testing.assert_allclose(np.asarray(a.upload().G),
+                               np.asarray(b.upload().G),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_streaming_gram_memory_bounded():
+    """Resident state is O(c·m²) no matter how much data streams in."""
+    rng = np.random.default_rng(4)
+    m, c = 10, 3
+    client = StreamingGramClient(backend="pallas")
+    sizes = []
+    for _ in range(5):
+        X = rng.normal(size=(400, m)).astype(np.float32)
+        y = rng.integers(0, c, size=400)
+        client.ingest(X, np.asarray(acts.encode_labels(y, c)))
+        sizes.append(client.memory_floats)
+    assert len(set(sizes)) == 1                       # never grows
+    mb = m + 1                                        # bias column
+    assert sizes[-1] == c * mb * mb + mb * c
+
+
+def test_gram_backend_switch_parity():
+    """backend="pallas" and backend="xla" produce the same statistics."""
+    X, D = _logistic_problem(n=257, m=13, c=4, seed=5)
+    st_x = client_gram_stats(X, D, act="logistic", backend="xla")
+    st_p = client_gram_stats(X, D, act="logistic", backend="pallas")
+    np.testing.assert_allclose(np.asarray(st_x.G), np.asarray(st_p.G),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_x.m_vec),
+                               np.asarray(st_p.m_vec),
+                               rtol=1e-5, atol=1e-4)
+    with pytest.raises(ValueError):
+        client_gram_stats(X, D, backend="tpu-only")
+
+
+def test_merge_gram_associative():
+    X, D = _logistic_problem(n=240, m=8, c=3, seed=6)
+    parts = np.array_split(np.arange(240), 3)
+    s0, s1, s2 = (client_gram_stats(X[p], D[p], backend="pallas")
+                  for p in parts)
+    left = merge_gram(merge_gram(s0, s1), s2)
+    right = merge_gram(s0, merge_gram(s1, s2))
+    np.testing.assert_allclose(np.asarray(left.G), np.asarray(right.G),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(left.m_vec),
+                               np.asarray(right.m_vec),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_fed_fit_gram_wire_matches_svd_wire():
+    X, D = _logistic_problem(n=320, m=10, c=2, seed=8)
+    parts = np.array_split(np.arange(320), 4)
+    pX = [X[p] for p in parts]
+    pD = [D[p] for p in parts]
+    W_svd = fed_fit(pX, pD, act="logistic", lam=1e-3)
+    W_gram = fed_fit(pX, pD, act="logistic", lam=1e-3,
+                     wire="gram", backend="pallas")
+    W_cen = centralized_solve_gram(X, D, act="logistic", lam=1e-3)
+    np.testing.assert_allclose(np.asarray(W_gram), np.asarray(W_cen),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(W_svd), np.asarray(W_gram),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_fed_fit_timed_gram_wire():
+    X, D = _logistic_problem(n=200, m=7, c=2, seed=9)
+    parts = np.array_split(np.arange(200), 2)
+    tf = fed_fit_timed([X[p] for p in parts], [D[p] for p in parts],
+                       wire="gram", backend="pallas")
+    W_cen = centralized_solve_gram(X, D, act="logistic", lam=1e-3)
+    np.testing.assert_allclose(np.asarray(tf.W), np.asarray(W_cen),
+                               rtol=1e-4, atol=1e-5)
+    assert len(tf.client_times) == 2
+    assert tf.train_time <= tf.cpu_time
+
+
+def test_gram_coordinator_incremental_admission():
+    """A late client merges in without recomputing anyone (paper §3.2)."""
+    X, D = _logistic_problem(n=300, m=8, c=3, seed=10)
+    parts = np.array_split(np.arange(300), 3)
+    coord = FedONNGramCoordinator(lam=1e-3)
+    coord.add_many([client_gram_stats(X[p], D[p], backend="pallas")
+                    for p in parts[:2]])
+    W_partial = coord.solve()
+    coord.add(client_gram_stats(X[parts[2]], D[parts[2]],
+                                backend="pallas"))
+    W_full = coord.solve()
+    W_cen = centralized_solve_gram(X, D, act="logistic", lam=1e-3)
+    assert float(np.abs(np.asarray(W_full) - np.asarray(W_cen)).max()) \
+        < 1e-4
+    # the partial model differs — admission genuinely changed the solve
+    assert float(np.abs(np.asarray(W_partial)
+                        - np.asarray(W_full)).max()) > 1e-6
