@@ -9,7 +9,7 @@ import time
 import numpy as np
 
 from repro.core import activations as acts
-from repro.core import federated, predict_labels
+from repro.core import predict_labels
 from repro.data import partition, synthetic
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
@@ -27,13 +27,17 @@ def load(name: str, scale: float = None, seed: int = 0):
     return synthetic.train_test_split(X, y, 0.7, seed)
 
 
-def fed_accuracy(parts, Xte, yte, n_classes=2, lam=1e-3):
-    W = federated.fed_fit(
+def fed_accuracy(parts, Xte, yte, n_classes=2, lam=1e-3, wire="svd",
+                 scenario=None, transport="local"):
+    """Single engine round over pre-built parts → (accuracy, W)."""
+    from repro.core.engine import FederationEngine
+    engine = FederationEngine(wire=wire, transport=transport,
+                              scenario=scenario, act="logistic", lam=lam)
+    report = engine.run(
         [p[0] for p in parts],
-        [acts.encode_labels(p[1], n_classes) for p in parts],
-        act="logistic", lam=lam)
-    pred = predict_labels(W, Xte, act="logistic")
-    return float((np.asarray(pred) == yte).mean()), W
+        [acts.encode_labels(p[1], n_classes) for p in parts])
+    pred = predict_labels(report.W, Xte, act="logistic")
+    return float((np.asarray(pred) == yte).mean()), report.W
 
 
 def write_csv(name: str, header, rows):

@@ -20,7 +20,8 @@ def main():
     args = ap.parse_args()
 
     from . import (fig2_clients_iid, fig3_energy, fig4_noniid,
-                   kernel_bench, roofline_table, table3_accuracy)
+                   kernel_bench, roofline_table, scenario_bench,
+                   table3_accuracy)
     from . import common
     if args.quick:
         common.CLIENTS_GRID = [1, 10, 100]
@@ -34,6 +35,8 @@ def main():
     fig4_noniid.run(args.scale)
     print("== Table 3: accuracy comparison vs baselines ==")
     table3_accuracy.run(args.scale)
+    print("== Scenario sweep: partition x dropout x late-join x wire ==")
+    scenario_bench.run(args.scale)
     print("== Kernel micro-bench ==")
     kernel_bench.run()
     kernel_bench.run_multi()

@@ -1,32 +1,37 @@
 """Quickstart: single-round federated learning of a one-layer network.
 
 Five clients hold disjoint (pathologically non-IID!) shards of a binary
-classification task; one aggregation round yields the exact centralized
-model.
+classification task; one engine round yields the exact centralized
+model. The engine composes the three federation axes — wire (svd/gram
+statistics), transport (local/mesh/stream), and availability scenario —
+and reports the paper's §4.1 metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (FedONNClient, FedONNCoordinator, activations,
-                        centralized_solve_gram, predict_labels)
-from repro.data import partition, synthetic
+from repro.core import (FederationEngine, Scenario,
+                        centralized_solve_gram, activations,
+                        predict_labels)
+from repro.data import synthetic
 
 # --- data: a HIGGS-shaped synthetic table, 70/30 split -------------------
 X, y = synthetic.generate("higgs", scale=5e-4, seed=0)
 (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
 
 # --- 5 clients, each seeing (mostly) a single class ----------------------
-parts = partition.pathological(Xtr, ytr, 5)
-coordinator = FedONNCoordinator(lam=1e-3)
-for Xp, yp in parts:
-    client = FedONNClient(Xp, activations.encode_labels(yp, 2), "logistic")
-    coordinator.add(client.compute())        # one upload per client
-W = coordinator.solve()                      # one aggregation round
+engine = FederationEngine(wire="svd", transport="local",
+                          scenario=Scenario(partition="pathological"),
+                          lam=1e-3, warmup=True)
+report = engine.run_dataset(Xtr, ytr, n_clients=5, n_classes=2)
 
-acc = float((np.asarray(predict_labels(W, Xte, act="logistic"))
+acc = float((np.asarray(predict_labels(report.W, Xte, act="logistic"))
              == yte).mean())
 print(f"federated (1 round, 5 non-IID clients): accuracy = {acc:.4f}")
+print(f"  train time {report.train_time * 1000:.1f} ms | "
+      f"Σ CPU {report.cpu_time * 1000:.1f} ms | "
+      f"{report.wh * 1000:.3f} mWh | "
+      f"uploads {report.wire_bytes / 1024:.1f} KiB on the svd wire")
 
 # --- the centralized model is the same model -----------------------------
 W_central = centralized_solve_gram(
@@ -35,5 +40,5 @@ acc_c = float((np.asarray(predict_labels(W_central, Xte, act="logistic"))
                == yte).mean())
 print(f"centralized (all data in one place):    accuracy = {acc_c:.4f}")
 print(f"max |W_fed - W_central| = "
-      f"{float(np.abs(np.asarray(W) - np.asarray(W_central)).max()):.2e}")
+      f"{float(np.abs(np.asarray(report.W) - np.asarray(W_central)).max()):.2e}")
 assert acc == acc_c

@@ -1,23 +1,24 @@
 """Streaming edge clients (paper Fig. 1): data arrives over time on
-low-power devices; each client folds chunks into O(m·r) running
+low-power devices; each client folds chunks into bounded running
 statistics and uploads once — the coordinator still recovers the exact
 centralized model.
 
-Both wire formats are shown: the paper's SVD statistics
-(``StreamingClient``, per-chunk Iwen–Ong merge) and the gram wire
-(``StreamingGramClient``, chunks stream through the fused Pallas kernel
-and merge by addition — no per-chunk SVD, DESIGN.md §3.2).
+The round runs through ``FederationEngine(transport="stream")``, which
+drives chunk-folding clients on either wire: the paper's SVD statistics
+(per-chunk Iwen–Ong merge, O(m·r) state) or the gram wire (chunks stream
+through the fused Pallas kernel, additive merge, O(c·m²) state —
+DESIGN.md §3.2). A standalone ``StreamingGramClient`` shows the
+on-device memory bound the engine relies on.
 
     PYTHONPATH=src python examples/streaming_edge.py
 """
 import numpy as np
 
-from repro.core import (activations, centralized_solve_gram, merge_gram,
-                        merge_many, predict_labels, solve_weights,
-                        solve_weights_gram)
-from repro.core.streaming import StreamingClient, StreamingGramClient
+from repro.core import (activations, centralized_solve_gram,
+                        predict_labels)
+from repro.core.engine import FederationEngine
+from repro.core.streaming import StreamingGramClient
 from repro.data import synthetic
-from repro.energy import watt_hours
 
 X, y = synthetic.generate("hepmass", scale=5e-4, seed=0)
 (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
@@ -25,41 +26,45 @@ D = np.asarray(activations.encode_labels(ytr, 2))
 
 P, chunks_per_client = 8, 5
 shards = np.array_split(np.arange(len(ytr)), P)
-clients = []
-for s in shards:
-    c = StreamingClient(act="logistic")
-    for chunk in np.array_split(s, chunks_per_client):  # data trickles in
-        c.ingest(Xtr[chunk], D[chunk])
-    clients.append(c)
-    print(f"client ingested {c.n_seen:5d} samples in {chunks_per_client} "
-          f"chunks — running stats: {c.memory_floats} floats "
-          f"({c.memory_floats * 4 / 1024:.1f} KB on-device)")
+pX = [Xtr[s] for s in shards]
+pD = [D[s] for s in shards]
 
-W = solve_weights(merge_many([c.upload() for c in clients]), 1e-3)
-acc = float((np.asarray(predict_labels(W, Xte, act="logistic"))
-             == yte).mean())
+
+def accuracy(W):
+    return float((np.asarray(predict_labels(W, Xte, act="logistic"))
+                  == yte).mean())
+
+
 W_c = centralized_solve_gram(Xtr, D, act="logistic", lam=1e-3)
-acc_c = float((np.asarray(predict_labels(W_c, Xte, act="logistic"))
-               == yte).mean())
-print(f"\nstreamed federated accuracy {acc:.4f} | centralized {acc_c:.4f}"
-      f" | max ΔW = "
-      f"{float(np.abs(np.asarray(W) - np.asarray(W_c)).max()):.2e}")
+acc_c = accuracy(W_c)
+
+# --- paper SVD wire: per-chunk Iwen-Ong folds, one upload each ----------
+engine = FederationEngine(wire="svd", transport="stream",
+                          chunks=chunks_per_client, lam=1e-3)
+report = engine.run(pX, pD)
+acc = accuracy(report.W)
+print(f"svd-wire  streamed federated accuracy {acc:.4f} | centralized "
+      f"{acc_c:.4f} | max ΔW = "
+      f"{float(np.abs(np.asarray(report.W) - np.asarray(W_c)).max()):.2e}"
+      f" | uploads {report.wire_bytes / 1024:.1f} KiB"
+      f" | {report.wh * 1e6:.1f} µWh")
 assert abs(acc - acc_c) < 1e-6
 
-# --- same round on the gram wire: additive merge, no per-chunk SVD -------
-gclients = []
-for s in shards:
-    g = StreamingGramClient(act="logistic", backend="pallas")
-    for chunk in np.array_split(s, chunks_per_client):
-        g.ingest(Xtr[chunk], D[chunk])
-    gclients.append(g)
-agg = gclients[0].upload()
-for g in gclients[1:]:
-    agg = merge_gram(agg, g.upload())
-W_g = solve_weights_gram(agg, 1e-3)
-acc_g = float((np.asarray(predict_labels(W_g, Xte, act="logistic"))
-               == yte).mean())
-print(f"gram-wire federated accuracy {acc_g:.4f} | on-device state "
-      f"{gclients[0].memory_floats} floats "
-      f"({gclients[0].memory_floats * 4 / 1024:.1f} KB)")
+# --- same round on the gram wire: additive merge, no per-chunk SVD ------
+engine_g = FederationEngine(wire="gram", transport="stream",
+                            chunks=chunks_per_client, backend="pallas",
+                            lam=1e-3)
+report_g = engine_g.run(pX, pD)
+acc_g = accuracy(report_g.W)
+print(f"gram-wire streamed federated accuracy {acc_g:.4f}"
+      f" | uploads {report_g.wire_bytes / 1024:.1f} KiB"
+      f" | {report_g.wh * 1e6:.1f} µWh")
 assert abs(acc_g - acc_c) < 1e-6
+
+# --- the edge memory bound the stream transport relies on ---------------
+g = StreamingGramClient(act="logistic", backend="pallas")
+for chunk in np.array_split(shards[0], chunks_per_client):
+    g.ingest(Xtr[chunk], D[chunk])
+print(f"one client ingested {g.n_seen} samples in {chunks_per_client} "
+      f"chunks — running stats: {g.memory_floats} floats "
+      f"({g.memory_floats * 4 / 1024:.1f} KB on-device, O(c·m²) bound)")

@@ -16,4 +16,14 @@ python -m pytest -x -q
 # streaming Gram kernel vs the XLA einsum path at the acceptance shape
 python -m pytest -x -q tests/test_kernels.py::test_gram_stats_multi_acceptance_shape
 
+# the federation engine end-to-end, once per transport on the gram wire
+# (tiny scale; set -e fails the script on any non-zero exit)
+for transport in local mesh stream; do
+  python -m repro.launch.fedtrain --dataset susy --scale 2e-4 \
+    --clients 4 --wire gram --transport "$transport" --scenario none
+done
+# and one availability scenario through the launcher
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
+  --wire gram --transport local --scenario "dropout=0.25,late_join=0.25"
+
 echo "ci_smoke: OK"

@@ -15,9 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-
-def _add_bias(X):
-    return jnp.concatenate([jnp.ones((X.shape[0], 1), X.dtype), X], axis=1)
+from ..core.util import add_bias as _add_bias
 
 
 @jax.jit

@@ -1,15 +1,22 @@
 """Paper core: single-round analytic federated learning for one-layer NNs."""
-from . import activations, federated, head, sharded, solver
+from . import activations, engine, federated, head, scenario, sharded, \
+    solver, wire
+from .engine import FederationEngine, RoundReport
 from .federated import (FedONNClient, FedONNCoordinator,
                         FedONNGramCoordinator, fed_fit, fed_fit_timed)
+from .scenario import ClientRoles, Scenario
 from .streaming import StreamingClient, StreamingGramClient
 from .solver import (ClientStats, GramStats, centralized_solve_gram,
                      client_gram_stats, client_stats, merge_gram, merge_many,
                      merge_stats, predict, predict_labels, solve_weights,
                      solve_weights_gram)
+from .wire import GramWire, SvdWire, Wire, get_wire
 
 __all__ = [
-    "activations", "federated", "head", "sharded", "solver",
+    "activations", "engine", "federated", "head", "scenario", "sharded",
+    "solver", "wire",
+    "FederationEngine", "RoundReport", "ClientRoles", "Scenario",
+    "Wire", "SvdWire", "GramWire", "get_wire",
     "FedONNClient", "FedONNCoordinator", "FedONNGramCoordinator",
     "fed_fit", "fed_fit_timed",
     "StreamingClient", "StreamingGramClient",

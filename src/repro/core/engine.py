@@ -1,0 +1,323 @@
+"""FederationEngine: one federated round = wire × transport × scenario.
+
+The paper's single-round claim used to be reproduced three separate times
+(in-process ``core/federated.py``, mesh-collective ``core/sharded.py``,
+streaming-edge ``core/streaming.py``), each with per-wire variants. The
+engine composes the axes instead (DESIGN.md §7):
+
+* **wire**      — the sufficient-statistics representation
+  (``core/wire.py``: ``"svd"`` | ``"gram"`` | any :class:`~.wire.Wire`),
+* **transport** — how statistics travel to the coordinator:
+
+  - ``"local"``  : P in-process clients, tree or sequential merge
+    (subsumes ``fed_fit`` / ``fed_fit_timed``),
+  - ``"mesh"``   : clients on a mesh axis, the merge as collectives via
+    ``Wire.mesh_reduce`` inside ``shard_map`` (subsumes
+    ``fed_fit_sharded*``),
+  - ``"stream"`` : chunk-folding edge clients that upload once (the
+    ``core/streaming.py`` clients as a transport),
+
+* **scenario**  — who participates and when (``core/scenario.py``:
+  partition strategy, dropout, late-join admission, stragglers).
+
+Every run returns a :class:`RoundReport` with the paper's §4.1 metrics —
+train time (slowest client + coordinator), Σ CPU, Wh from process-CPU
+metering (``energy/meter.py``) — plus the per-wire upload bytes and the
+roles that were played. Model correctness under scenarios is exact: the
+returned ``W`` is the direct solve over the participating clients' union
+(bit-matching for the local transport with sequential merge — tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import activations as acts
+from .scenario import ClientRoles, Scenario
+from .util import add_bias, as_2d
+from .wire import Wire, get_wire
+from ..energy import EnergyMeter, watt_hours
+from ..sharding import shard_map_compat
+
+TRANSPORTS = ("local", "mesh", "stream")
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """Everything one federated round produced (paper §4.1 metrics).
+
+    * ``train_time``  = slowest client clock (measured compute + that
+      client's simulated straggler delay) + coordinator — real FL wall
+      time,
+    * ``cpu_time``    = Σ measured client compute + coordinator — the
+      paper's energy proxy; simulated delays are idle waiting and never
+      count here,
+    * ``cpu_seconds`` = measured process CPU for the whole round
+      (``EnergyMeter``), from which ``wh`` derives,
+    * ``wire_bytes``  = Σ upload bytes over participants for this wire
+      (on the mesh transport the devices are the uploading clients, so
+      this counts one upload per device),
+    * ``W_first``     = the model after the on-time group only (present
+      iff the scenario had late joiners; the final ``W`` admits them).
+
+    On the mesh transport per-client compute happens inside the
+    collective phase (counted in ``coordinator_time``); ``client_times``
+    then carry only the scenario's simulated straggler delays.
+    """
+    W: jnp.ndarray
+    client_times: List[float]
+    coordinator_time: float
+    wire_bytes: int
+    roles: ClientRoles
+    n_samples: int
+    cpu_seconds: float = 0.0
+    rounds: int = 1
+    W_first: Optional[jnp.ndarray] = None
+
+    @property
+    def client_clocks(self) -> List[float]:
+        """Per-participant wall clocks: measured compute + simulated delay."""
+        delays = self.roles.delays
+        return [t + delays[i] for t, i in
+                zip(self.client_times, self.roles.participants)]
+
+    @property
+    def train_time(self) -> float:
+        clocks = self.client_clocks
+        return (max(clocks) if clocks else 0.0) + self.coordinator_time
+
+    @property
+    def cpu_time(self) -> float:
+        return sum(self.client_times) + self.coordinator_time
+
+    @property
+    def wh(self) -> float:
+        return watt_hours(self.cpu_seconds)
+
+
+class FederationEngine:
+    """Single-round federated fitting over composable axes.
+
+    Parameters mirror the historical entry points: ``act``/``lam`` as in
+    ``fed_fit``, ``tree`` selects the local merge topology, ``backend``
+    is the gram wire's client-pass selector (``None`` = Pallas on TPU,
+    XLA elsewhere), ``chunks`` is the per-client chunk count for the
+    stream transport, ``mesh``/``axis`` configure the mesh transport
+    (default: a 1-D mesh over all local devices). ``warmup=True`` runs an
+    untimed compile pass before the timed client loop so ``client_times``
+    measure steady-state (see :func:`~.federated.fed_fit_timed`).
+    """
+
+    def __init__(self, wire: Any = "svd", transport: str = "local",
+                 scenario: Optional[Scenario] = None, *,
+                 act: str = "logistic", lam: float = 1e-3,
+                 backend: Any = "xla", tree: bool = True, chunks: int = 4,
+                 warmup: bool = False, mesh=None, axis: str = "data",
+                 dtype: Any = jnp.float32):
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r} "
+                             f"(expected one of {TRANSPORTS})")
+        self.wire: Wire = get_wire(wire, act=act, backend=backend,
+                                   dtype=dtype)
+        self.transport = transport
+        self.scenario = scenario or Scenario()
+        self.lam = lam
+        self.tree = tree
+        self.chunks = max(1, chunks)
+        self.warmup = warmup
+        self.mesh = mesh
+        self.axis = axis
+
+    # ------------------------------------------------------------ entry
+    def run(self, parts_X: Sequence, parts_d: Sequence) -> RoundReport:
+        """One round over pre-partitioned client data."""
+        if len(parts_X) != len(parts_d):
+            raise ValueError("parts_X and parts_d length mismatch")
+        parts_d = [as_2d(d) for d in parts_d]
+        with EnergyMeter() as em:
+            if self.transport == "mesh":
+                report = self._run_mesh(parts_X, parts_d)
+            else:
+                report = self._run_inprocess(parts_X, parts_d)
+        report.cpu_seconds = em.cpu_seconds
+        return report
+
+    def fit(self, parts_X: Sequence, parts_d: Sequence) -> jnp.ndarray:
+        return self.run(parts_X, parts_d).W
+
+    def run_dataset(self, X, y, n_clients: int,
+                    n_classes: int = 2) -> RoundReport:
+        """Partition a labelled dataset per the scenario, then run."""
+        parts = self.scenario.make_parts(X, y, n_clients)
+        return self.run([p[0] for p in parts],
+                        [acts.encode_labels(p[1], n_classes)
+                         for p in parts])
+
+    # ------------------------------------------------- in-process paths
+    def _client_stats(self, X, d):
+        if self.transport != "stream" or self.chunks == 1 \
+                or X.shape[0] == 0:
+            # empty shards (over-partitioned data) take the batch path,
+            # which handles n == 0 uniformly across wires
+            return self.wire.local_stats(X, d)
+        # stream transport: the chunk-folding edge client — each chunk's
+        # statistics merge into the running aggregate, data is never
+        # held whole (StreamingClient semantics as a transport)
+        agg = None
+        for idx in np.array_split(np.arange(X.shape[0]),
+                                  min(self.chunks, X.shape[0])):
+            st = self.wire.local_stats(X[idx], d[idx])
+            agg = st if agg is None else self.wire.merge(agg, st)
+        return agg
+
+    def _fold(self, stats_list):
+        return self.wire.merge_tree(stats_list) if self.tree else \
+            self.wire.merge_many(stats_list)
+
+    def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
+        roles = self.scenario.roles(len(parts_X))
+        if self.warmup and roles.participants:
+            # compile pass at the first participant's real shapes so the
+            # timed loop below measures steady-state execution
+            i0 = roles.participants[0]
+            st = self._client_stats(parts_X[i0], parts_d[i0])
+            jax.block_until_ready(
+                self.wire.solve(self.wire.merge(st, st), self.lam))
+        stats, times, n_samples = {}, [], 0
+        for i in roles.participants:
+            t0 = time.perf_counter()
+            st = self._client_stats(parts_X[i], parts_d[i])
+            jax.block_until_ready(st)
+            times.append(time.perf_counter() - t0)
+            stats[i] = st
+            n_samples += int(parts_X[i].shape[0])
+        wire_bytes = sum(self.wire.wire_bytes(stats[i])
+                         for i in roles.participants)
+        t0 = time.perf_counter()
+        agg = self._fold([stats[i] for i in roles.on_time])
+        W_first = None
+        if roles.late:
+            # first solve from the on-time group — a usable model — then
+            # admit the late joiners incrementally (paper §3.2)
+            W_first = self.wire.solve(agg, self.lam)
+            jax.block_until_ready(W_first)
+            for i in roles.late:
+                agg = self.wire.merge(agg, stats[i])
+        W = self.wire.solve(agg, self.lam)
+        jax.block_until_ready(W)
+        coordinator_time = time.perf_counter() - t0
+        return RoundReport(W=W, client_times=times,
+                           coordinator_time=coordinator_time,
+                           wire_bytes=wire_bytes, roles=roles,
+                           n_samples=n_samples, W_first=W_first)
+
+    # -------------------------------------------------------- mesh path
+    def _run_mesh(self, parts_X, parts_d) -> RoundReport:
+        # One collective phase: dropout and partitioning apply (only the
+        # participants' union enters the solve); late joiners are admitted
+        # within the same collective — there is no cheaper "first solve"
+        # on a mesh, the round *is* the collective.
+        roles = self.scenario.roles(len(parts_X))
+        X = jnp.concatenate([jnp.asarray(parts_X[i])
+                             for i in roles.participants], axis=0)
+        D = jnp.concatenate([parts_d[i] for i in roles.participants],
+                            axis=0)
+        return self.run_mesh_arrays(X, D, roles=roles)
+
+    def run_mesh_arrays(self, X, D,
+                        roles: Optional[ClientRoles] = None) -> RoundReport:
+        """Mesh round over already-concatenated data (one client/device)."""
+        mesh = self.mesh or make_client_mesh(axis=self.axis)
+        Pn = mesh.shape[self.axis]
+        X, D = jnp.asarray(X), as_2d(D)
+        n = int(X.shape[0])
+        wire = self.wire
+        if getattr(wire, "add_bias", None) is True and \
+                dataclasses.is_dataclass(wire):
+            # pre-add the bias host-side (data-parallel safe) so pad rows
+            # can be all-zero including their bias entry — see pad_for_mesh
+            X = add_bias(jnp.asarray(X, getattr(wire, "dtype", X.dtype)))
+            wire = dataclasses.replace(wire, add_bias=False)
+        elif n % Pn and getattr(wire, "add_bias", None) is not False:
+            # a custom wire without a toggleable bias column: we cannot
+            # guarantee zero-contribution padding, so require divisibility
+            # (add_bias=False wires are safe — all-zero pad rows stay
+            # all-zero through their local_stats)
+            raise ValueError(
+                f"{n} samples do not divide the {Pn}-way mesh axis and "
+                f"wire {getattr(wire, 'name', wire)!r} has no add_bias "
+                "field to make zero-padding exact; pad or trim the data")
+        X, D = pad_for_mesh(X, D, Pn, wire.act)
+        lam, axis = self.lam, self.axis
+
+        def shard_fn(Xs, Ds):
+            st = wire.local_stats(Xs, Ds)
+            return wire.solve(wire.mesh_reduce(st, axis), lam)
+
+        from jax.sharding import PartitionSpec as P
+        fn = shard_map_compat(shard_fn, mesh=mesh,
+                              in_specs=(P(self.axis, None),
+                                        P(self.axis, None)),
+                              out_specs=P(None, None))
+        if self.warmup:
+            # untimed compile pass at the real shapes, as on the other
+            # transports, so the timed collective is steady-state
+            jax.block_until_ready(fn(X, D))
+        t0 = time.perf_counter()
+        W = fn(X, D)
+        jax.block_until_ready(W)
+        coordinator_time = time.perf_counter() - t0
+        if roles is None:
+            roles = ClientRoles(on_time=tuple(range(Pn)), late=(),
+                                dropped=(), delays=(0.0,) * Pn)
+        # per-client compute happens inside the collective (it lands in
+        # coordinator_time), so measured client compute is zero here; the
+        # participants' simulated straggler delays still gate the round
+        # via RoundReport.client_clocks — train_time = slowest delay +
+        # collective phase, while cpu_time stays pure compute
+        client_times = [0.0] * len(roles.participants)
+        # on this transport the mesh devices are the uploading clients:
+        # wire_bytes counts one upload per device at the true (unpadded)
+        # per-device sample count — pad rows are never sent anywhere
+        n_local = -(-n // Pn)
+        wire_bytes = Pn * wire.stats_bytes(n_local, X.shape[1],
+                                           D.shape[1])
+        return RoundReport(W=W, client_times=client_times,
+                           coordinator_time=coordinator_time,
+                           wire_bytes=wire_bytes, roles=roles,
+                           n_samples=n)
+
+
+def make_client_mesh(n_clients_axis: Optional[int] = None,
+                     axis: str = "data"):
+    """A 1-D mesh over all local devices for simulated-client sharding."""
+    n = n_clients_axis or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
+def pad_for_mesh(X, D, Pn: int, act: str = "logistic"):
+    """Zero-pad ``(X, D)`` so the sample axis divides the mesh axis.
+
+    ``X`` must already carry its bias column (the engine pre-adds it and
+    runs the wire with ``add_bias=False``): pad rows are then *fully*
+    zero — a row whose bias were re-added as 1 would contribute
+    ``f'(d̄)²`` to the Gram's bias entries. With the whole row zero, the
+    contribution to both wires' statistics is exactly zero: ``m_vec``
+    and ``G`` gain zero terms, and the SVD factors only gain zero
+    singular directions orthogonal to ``m_vec``. Targets pad with the
+    activation midpoint ``f(0)`` so ``f_inv`` stays finite.
+    """
+    pad = (-X.shape[0]) % Pn
+    if not pad:
+        return X, D
+    mid = acts.get(act).f(jnp.zeros((), dtype=D.dtype))
+    X = jnp.concatenate(
+        [X, jnp.zeros((pad, X.shape[1]), X.dtype)], axis=0)
+    D = jnp.concatenate(
+        [D, jnp.full((pad, D.shape[1]), mid, D.dtype)], axis=0)
+    return X, D

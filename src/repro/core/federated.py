@@ -1,21 +1,21 @@
 """Client/coordinator orchestration (paper Algorithms 1 & 2).
 
-This module is the *simulated-federation* driver used by benchmarks and
-examples: P in-process clients, one coordinator, one round. The
-mesh-distributed version (clients mapped onto devices with collectives as
-transport) lives in ``core/sharded.py``.
+Since the ``FederationEngine`` refactor this module is a thin
+back-compat layer: the coordinator classes wrap ``core/wire.py`` wires,
+and ``fed_fit`` / ``fed_fit_timed`` route through
+``core/engine.FederationEngine`` with the ``"local"`` transport. New
+code should use the engine directly — it adds transports (mesh, stream),
+availability scenarios, and energy metering on top of the same solves.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 
-from . import solver
 from .solver import ClientStats, GramStats
+from .wire import GramWire, SvdWire
 
 
 @dataclasses.dataclass
@@ -26,7 +26,7 @@ class FedONNClient:
     act: str = "logistic"
 
     def compute(self) -> ClientStats:
-        return solver.client_stats(self.X, self.d, self.act)
+        return SvdWire(act=self.act).local_stats(self.X, self.d)
 
     def compute_gram(self, backend: str = "xla") -> GramStats:
         """Eq.-3 statistics for the gram wire (see EXPERIMENTS.md §Perf).
@@ -35,8 +35,8 @@ class FedONNClient:
         kernel — the bounded-memory edge path (O(c·m²) output, no
         O(c·n·m) intermediate).
         """
-        return solver.client_gram_stats(self.X, self.d, self.act,
-                                        backend=backend)
+        return GramWire(act=self.act,
+                        backend=backend).local_stats(self.X, self.d)
 
 
 class FedONNCoordinator:
@@ -47,16 +47,17 @@ class FedONNCoordinator:
     §3.2, "the coordinator could add clients at different stages").
     """
 
+    _wire = SvdWire()
+
     def __init__(self, lam: float = 1e-3):
         self.lam = lam
         self._agg: Optional[ClientStats] = None
         self.rounds = 0  # stays at 1 for any number of clients — the claim
 
     def add(self, stats: ClientStats) -> None:
-        if self._agg is None:
-            self._agg = stats
-        else:
-            self._agg = solver.merge_stats(self._agg, stats)
+        self._agg = stats if self._agg is None else \
+            self._wire.merge(self._agg, stats)
+        self.rounds = 1
 
     def add_many(self, stats_list: Sequence[ClientStats],
                  tree: bool = True) -> None:
@@ -69,25 +70,14 @@ class FedONNCoordinator:
         items = list(stats_list)
         if self._agg is not None:
             items = [self._agg] + items
-        if tree:
-            while len(items) > 1:
-                nxt = [solver.merge_stats(items[i], items[i + 1])
-                       for i in range(0, len(items) - 1, 2)]
-                if len(items) % 2:
-                    nxt.append(items[-1])
-                items = nxt
-            self._agg = items[0]
-        else:
-            agg = items[0]
-            for st in items[1:]:
-                agg = solver.merge_stats(agg, st)
-            self._agg = agg
+        self._agg = self._wire.merge_tree(items) if tree else \
+            self._wire.merge_many(items)
         self.rounds = 1
 
     def solve(self) -> jnp.ndarray:
         if self._agg is None:
             raise RuntimeError("no client statistics aggregated yet")
-        return solver.solve_weights(self._agg, self.lam)
+        return self._wire.solve(self._agg, self.lam)
 
 
 class FedONNGramCoordinator:
@@ -100,6 +90,8 @@ class FedONNGramCoordinator:
     this wire beats the paper's SVD wire.
     """
 
+    _wire = GramWire()
+
     def __init__(self, lam: float = 1e-3):
         self.lam = lam
         self._agg: Optional[GramStats] = None
@@ -107,7 +99,7 @@ class FedONNGramCoordinator:
 
     def add(self, stats: GramStats) -> None:
         self._agg = stats if self._agg is None else \
-            solver.merge_gram(self._agg, stats)
+            self._wire.merge(self._agg, stats)
         self.rounds = 1
 
     def add_many(self, stats_list: Sequence[GramStats]) -> None:
@@ -117,7 +109,7 @@ class FedONNGramCoordinator:
     def solve(self) -> jnp.ndarray:
         if self._agg is None:
             raise RuntimeError("no client statistics aggregated yet")
-        return solver.solve_weights_gram(self._agg, self.lam)
+        return self._wire.solve(self._agg, self.lam)
 
 
 def fed_fit(parts_X: Sequence, parts_d: Sequence, act: str = "logistic",
@@ -128,20 +120,13 @@ def fed_fit(parts_X: Sequence, parts_d: Sequence, act: str = "logistic",
     ``wire="svd"`` is the paper's eq.-5 representation; ``wire="gram"``
     publishes the eq.-3 Gram instead (additive merge; ``backend``
     selects the client-side statistics path, see
-    ``solver.client_gram_stats``).
+    ``solver.client_gram_stats``). Shim over
+    :class:`~.engine.FederationEngine` with the ``"local"`` transport.
     """
-    if wire not in ("svd", "gram"):
-        raise ValueError(f"unknown wire {wire!r} (expected 'svd'|'gram')")
-    if wire == "gram":
-        coord_g = FedONNGramCoordinator(lam=lam)
-        coord_g.add_many([FedONNClient(X, d, act).compute_gram(backend)
-                          for X, d in zip(parts_X, parts_d)])
-        return coord_g.solve()
-    coord = FedONNCoordinator(lam=lam)
-    stats = [FedONNClient(X, d, act).compute() for X, d in
-             zip(parts_X, parts_d)]
-    coord.add_many(stats, tree=tree)
-    return coord.solve()
+    from .engine import FederationEngine
+    return FederationEngine(wire=wire, transport="local", act=act,
+                            lam=lam, backend=backend,
+                            tree=tree).fit(parts_X, parts_d)
 
 
 @dataclasses.dataclass
@@ -173,26 +158,15 @@ def fed_fit_timed(parts_X, parts_d, act="logistic", lam=1e-3,
     ``compute_gram(backend)`` (``backend="pallas"`` = the fused streaming
     kernel) and an additive coordinator — the energy-model numbers for
     the wire comparison in EXPERIMENTS.md §Perf.
+
+    The engine runs an *untimed warmup pass* (client statistics + a merge
+    + a solve at the first client's real shapes) before the timed loop,
+    so ``client_times`` measure steady-state execution rather than
+    charging JIT compilation to whichever client happens to go first.
     """
-    if wire not in ("svd", "gram"):
-        raise ValueError(f"unknown wire {wire!r} (expected 'svd'|'gram')")
-    gram = wire == "gram"
-    stats, times = [], []
-    for X, d in zip(parts_X, parts_d):
-        client = FedONNClient(X, d, act)
-        t0 = time.perf_counter()
-        st = client.compute_gram(backend) if gram else client.compute()
-        jax.block_until_ready(st.G if gram else st.U)
-        times.append(time.perf_counter() - t0)
-        stats.append(st)
-    coord = FedONNGramCoordinator(lam=lam) if gram else \
-        FedONNCoordinator(lam=lam)
-    t0 = time.perf_counter()
-    if gram:
-        coord.add_many(stats)
-    else:
-        coord.add_many(stats, tree=tree)
-    W = coord.solve()
-    jax.block_until_ready(W)
-    t_coord = time.perf_counter() - t0
-    return TimedFit(W=W, client_times=times, coordinator_time=t_coord)
+    from .engine import FederationEngine
+    report = FederationEngine(wire=wire, transport="local", act=act,
+                              lam=lam, backend=backend, tree=tree,
+                              warmup=True).run(parts_X, parts_d)
+    return TimedFit(W=report.W, client_times=report.client_times,
+                    coordinator_time=report.coordinator_time)

@@ -1,0 +1,111 @@
+"""Client-availability scenarios for a federated round (paper §3.2).
+
+A :class:`Scenario` describes *who participates and when* in a single
+round, orthogonally to wire format and transport — the participant-
+selection / availability axis green-FL work stresses (Yousefpour et al.,
+arXiv:2303.14604):
+
+* ``partition``      — how the dataset splits across clients
+  (``data/partition.py`` registry: ``iid`` / ``pathological`` /
+  ``dirichlet``; ``alpha`` is the Dirichlet concentration),
+* ``dropout``        — fraction of clients offline for the whole round
+  (their data simply never enters the solve),
+* ``late_join``      — fraction admitted only *after* the first solve,
+  exercising the paper's "the coordinator could add clients at different
+  stages" without retraining anyone,
+* ``straggler_frac`` / ``straggler_delay`` — that fraction of surviving
+  clients report ``straggler_delay`` seconds late. Delays are *simulated*
+  (added to the reported client clock, never slept): they move the
+  slowest-client ``train_time`` metric without burning real energy, and
+  must never change the model (tested).
+
+All role assignment is deterministic in ``seed``, so an engine run and an
+external reference solve can agree on the exact participant set.
+``Scenario.parse("dropout=0.3,late_join=0.2")`` backs the launcher's
+``--scenario`` flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientRoles:
+    """Role assignment for one round — indices into the client list."""
+    on_time: Tuple[int, ...]
+    late: Tuple[int, ...]
+    dropped: Tuple[int, ...]
+    delays: Tuple[float, ...]     # per-client simulated extra latency (s)
+
+    @property
+    def participants(self) -> Tuple[int, ...]:
+        """Everyone whose data ends up in the final model, merge order."""
+        return self.on_time + self.late
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    partition: str = "iid"
+    alpha: float = 0.3            # dirichlet concentration (label skew)
+    dropout: float = 0.0
+    late_join: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_delay: float = 0.0
+    seed: int = 0
+
+    def roles(self, P: int) -> ClientRoles:
+        """Deterministic role draw for ``P`` clients.
+
+        Dropout is taken first, then late-joiners, both clamped so at
+        least one client stays on time (a round needs a first solve).
+        """
+        rng = np.random.default_rng(self.seed)
+        perm = rng.permutation(P)
+        n_drop = min(int(round(self.dropout * P)), P - 1)
+        n_late = min(int(round(self.late_join * P)), P - n_drop - 1)
+        dropped = tuple(sorted(int(i) for i in perm[:n_drop]))
+        late = tuple(sorted(int(i) for i in perm[n_drop:n_drop + n_late]))
+        on_time = tuple(sorted(int(i) for i in perm[n_drop + n_late:]))
+        delays = np.zeros(P)
+        survivors = np.asarray(on_time + late, dtype=int)
+        n_strag = int(round(self.straggler_frac * len(survivors)))
+        if n_strag and self.straggler_delay > 0:
+            strag = rng.choice(survivors, size=n_strag, replace=False)
+            delays[strag] = self.straggler_delay
+        return ClientRoles(on_time=on_time, late=late, dropped=dropped,
+                           delays=tuple(float(d) for d in delays))
+
+    def make_parts(self, X, y, P: int):
+        """Partition a labelled dataset into ``P`` client shards."""
+        from ..data import partition as _partition
+        kw = {"seed": self.seed}
+        if self.partition == "dirichlet":
+            kw["alpha"] = self.alpha
+        return _partition.partition(self.partition, X, y, P, **kw)
+
+    @classmethod
+    def parse(cls, spec: Optional[str]) -> "Scenario":
+        """``"dropout=0.3,late_join=0.2,partition=dirichlet"`` → Scenario.
+
+        ``None``, ``""`` and ``"none"`` give the default (everyone on
+        time). Keys are the dataclass fields; ``-`` in a key reads as
+        ``_`` so shell-friendly ``late-join=0.2`` works too.
+        """
+        if not spec or spec.strip().lower() == "none":
+            return cls()
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {}
+        for item in spec.split(","):
+            key, sep, val = item.partition("=")
+            key = key.strip().replace("-", "_")
+            if not sep or key not in fields:
+                raise ValueError(
+                    f"bad scenario item {item!r} (known keys: "
+                    f"{sorted(fields)})")
+            default = getattr(cls, key)
+            kw[key] = val.strip() if isinstance(default, str) else \
+                type(default)(val)
+        return cls(**kw)

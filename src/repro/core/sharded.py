@@ -7,7 +7,10 @@ that axis, and the coordinator's incremental SVD merge becomes a one-shot
 Iwen–Ong merge computed redundantly (replicated) on every device. One FL
 round == one collective phase.
 
-Two wire formats, mathematically equivalent:
+Since the ``FederationEngine`` refactor the collective logic lives in
+``core/wire.py`` (``Wire.mesh_reduce``) and the shard_map plumbing in
+``core/engine.py`` (``transport="mesh"``); the entry points here are
+back-compat shims. Wire trade-off (see EXPERIMENTS.md §Perf H3):
 
 * ``fed_fit_sharded``      — the paper's eq.-5/eq.-6 representation:
   all_gather of (k, m, r) factors then wide SVD. Communication
@@ -15,23 +18,16 @@ Two wire formats, mathematically equivalent:
 * ``fed_fit_sharded_gram`` — beyond-paper eq.-3 representation: psum of
   the (k, m, m) Gram. Communication O(k·m²) and a cheaper reduce
   (ring all-reduce) instead of gather+SVD. Better whenever m < P·r;
-  slightly worse conditioning (κ² of the Gram). See EXPERIMENTS.md §Perf.
+  slightly worse conditioning (κ² of the Gram).
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import solver
-from ..sharding import shard_map_compat
-
-
-def _local_stats(X, D, act):
-    # no bias-row trick needed to change: bias column is data-parallel safe
-    return solver.client_stats(X, D, act=act, add_bias=True)
+from .engine import FederationEngine, make_client_mesh  # noqa: F401
+                                        # (make_client_mesh re-exported
+                                        # for its historical home here)
 
 
 def fed_fit_sharded(X, D, act="logistic", lam: float = 1e-3, *,
@@ -41,24 +37,9 @@ def fed_fit_sharded(X, D, act="logistic", lam: float = 1e-3, *,
     Returns the replicated global weight matrix (m, c) — identical (up to
     fp rounding) to the centralized solve, which is the paper's core claim.
     """
-    def shard_fn(Xs, Ds):
-        st = _local_stats(Xs, Ds, act)
-        # "upload": gather every client's factors and moment vector
-        US = jax.lax.all_gather(st.US, axis)           # (Pₐ, k, m, r)
-        m_vec = jax.lax.psum(st.m_vec, axis)           # Σ m_p (eq. 10)
-        Pn, k, m, r = US.shape
-        wide = jnp.moveaxis(US, 0, -2).reshape(k, m, Pn * r)
-        U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
-        rr = min(m, Pn * r)
-        merged = solver.ClientStats(U=U[..., :rr], s=s[..., :rr],
-                                    m_vec=m_vec,
-                                    n=jax.lax.psum(st.n, axis))
-        return solver.solve_weights(merged, lam)
-
-    fn = shard_map_compat(shard_fn, mesh=mesh,
-                          in_specs=(P(axis, None), P(axis, None)),
-                          out_specs=P(None, None))
-    return fn(jnp.asarray(X), _as_2d(D))
+    engine = FederationEngine(wire="svd", transport="mesh", act=act,
+                              lam=lam, mesh=mesh, axis=axis)
+    return engine.run_mesh_arrays(X, D).W
 
 
 def fed_fit_sharded_gram(X, D, act="logistic", lam: float = 1e-3, *,
@@ -73,27 +54,10 @@ def fed_fit_sharded_gram(X, D, act="logistic", lam: float = 1e-3, *,
     only cost time; pass ``"pallas"`` explicitly to force the kernel
     (interpret mode off-TPU) end to end.
     """
-    if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-
-    def shard_fn(Xs, Ds):
-        st = solver.client_gram_stats(Xs, Ds, act=act, add_bias=True,
-                                      backend=backend)
-        G = jax.lax.psum(st.G, axis)
-        m_vec = jax.lax.psum(st.m_vec, axis)
-        n = jax.lax.psum(st.n, axis)
-        return solver.solve_weights_gram(
-            solver.GramStats(G=G, m_vec=m_vec, n=n), lam)
-
-    fn = shard_map_compat(shard_fn, mesh=mesh,
-                          in_specs=(P(axis, None), P(axis, None)),
-                          out_specs=P(None, None))
-    return fn(jnp.asarray(X), _as_2d(D))
-
-
-def _as_2d(D):
-    D = jnp.asarray(D)
-    return D[:, None] if D.ndim == 1 else D
+    engine = FederationEngine(wire="gram", transport="mesh", act=act,
+                              lam=lam, backend=backend, mesh=mesh,
+                              axis=axis)
+    return engine.run_mesh_arrays(X, D).W
 
 
 def choose_wire(P: int, m: int, r: int) -> str:
@@ -119,9 +83,3 @@ def fed_fit_sharded_auto(X, D, act="logistic", lam: float = 1e-3, *,
         return fed_fit_sharded(X, D, act=act, lam=lam, mesh=mesh, axis=axis)
     return fed_fit_sharded_gram(X, D, act=act, lam=lam, mesh=mesh,
                                 axis=axis, backend=backend)
-
-
-def make_client_mesh(n_clients_axis: int | None = None) -> Mesh:
-    """A 1-D mesh over all local devices for simulated-client sharding."""
-    n = n_clients_axis or len(jax.devices())
-    return jax.make_mesh((n,), ("data",))

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from . import activations as acts
+from .util import add_bias as _add_bias, as_2d as _as_2d
 
 
 class ClientStats(NamedTuple):
@@ -48,17 +49,10 @@ class ClientStats(NamedTuple):
         return self.U * self.s[..., None, :]
 
 
-def _add_bias(X: jnp.ndarray) -> jnp.ndarray:
-    ones = jnp.ones((X.shape[0], 1), dtype=X.dtype)
-    return jnp.concatenate([ones, X], axis=1)
-
-
 def _prep(X, D, act, add_bias, dtype):
     act = acts.get(act)
     X = jnp.asarray(X, dtype)
-    D = jnp.asarray(D, dtype)
-    if D.ndim == 1:
-        D = D[:, None]
+    D = _as_2d(jnp.asarray(D, dtype))
     if add_bias:
         X = _add_bias(X)
     d_bar = act.f_inv(D)          # (n, c) pre-activation targets

@@ -3,11 +3,16 @@ repeated each time new data arrives to the clients", and eq. 10's
 incremental moment update).
 
 A client does not need to hold its dataset: it folds each arriving chunk
-into its running (U, s, m) statistics via the same Iwen–Ong merge the
-coordinator uses — the merge is associative, so chunk-wise local merging
-followed by one upload is exactly equivalent to computing on the full
-local dataset (tested). Memory on the edge device stays O(m²) regardless
-of how much data streams through — the green/edge story of the paper.
+into its running statistics via the same associative merge the
+coordinator uses — chunk-wise local merging followed by one upload is
+exactly equivalent to computing on the full local dataset (tested).
+Memory on the edge device stays O(m²) regardless of how much data
+streams through — the green/edge story of the paper.
+
+Since the ``FederationEngine`` refactor both clients are thin wrappers
+over ``core/wire.py`` (``SvdWire`` / ``GramWire``); the engine's
+``transport="stream"`` uses the same fold to run whole federated rounds
+over chunk-feeding clients.
 """
 from __future__ import annotations
 
@@ -16,23 +21,27 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from . import solver
 from .solver import ClientStats, GramStats
+from .wire import GramWire, SvdWire
 
 
 @dataclasses.dataclass
 class StreamingClient:
-    """Edge client that ingests data chunk by chunk."""
+    """Edge client that ingests data chunk by chunk (paper SVD wire)."""
     act: str = "logistic"
     dtype: object = jnp.float32
     _stats: Optional[ClientStats] = None
     n_seen: int = 0
 
+    @property
+    def wire(self) -> SvdWire:
+        return SvdWire(act=self.act, dtype=self.dtype)
+
     def ingest(self, X_chunk, d_chunk) -> None:
-        new = solver.client_stats(X_chunk, d_chunk, act=self.act,
-                                  dtype=self.dtype)
+        wire = self.wire
+        new = wire.local_stats(X_chunk, d_chunk)
         self._stats = new if self._stats is None else \
-            solver.merge_stats(self._stats, new)
+            wire.merge(self._stats, new)
         self.n_seen += X_chunk.shape[0]
 
     def upload(self) -> ClientStats:
@@ -68,12 +77,16 @@ class StreamingGramClient:
     _stats: Optional[GramStats] = None
     n_seen: int = 0
 
+    @property
+    def wire(self) -> GramWire:
+        return GramWire(act=self.act, backend=self.backend,
+                        dtype=self.dtype)
+
     def ingest(self, X_chunk, d_chunk) -> None:
-        new = solver.client_gram_stats(X_chunk, d_chunk, act=self.act,
-                                       dtype=self.dtype,
-                                       backend=self.backend)
+        wire = self.wire
+        new = wire.local_stats(X_chunk, d_chunk)
         self._stats = new if self._stats is None else \
-            solver.merge_gram(self._stats, new)
+            wire.merge(self._stats, new)
         self.n_seen += X_chunk.shape[0]
 
     def upload(self) -> GramStats:
@@ -83,7 +96,7 @@ class StreamingGramClient:
 
     def solve(self, lam: float = 1e-3) -> jnp.ndarray:
         """Local model from the running statistics (no upload needed)."""
-        return solver.solve_weights_gram(self.upload(), lam)
+        return self.wire.solve(self.upload(), lam)
 
     @property
     def memory_floats(self) -> int:

@@ -1,0 +1,190 @@
+"""Wire protocol: the pluggable sufficient-statistics representation.
+
+A *wire* bundles everything the federation engine needs to know about one
+representation of the paper's client statistics:
+
+* ``local_stats(X, d)``    — the client-side pass (paper Alg. 1),
+* ``merge(a, b)``          — the associative coordinator merge (Alg. 2),
+* ``merge_many(list)``     — deterministic sequential left fold of
+  ``merge`` (merge *topology* — tree vs sequential — is engine policy),
+* ``solve(stats, lam)``    — the coordinator solve,
+* ``wire_bytes(stats)``    — upload size of one client's publication,
+* ``stats_bytes(n, m, c)`` — the same, analytically from shapes (used for
+  mesh transports where per-client stats never materialize host-side),
+* ``mesh_reduce(stats, axis)`` — the merge expressed as mesh collectives,
+  for use inside ``shard_map`` (DESIGN.md §4).
+
+Two implementations wrap ``core/solver.py``:
+
+* :class:`SvdWire`  — the paper's eq.-5/eq.-6 representation
+  (``(U·S, m_vec)`` factors, Iwen–Ong merge, all_gather + wide SVD on a
+  mesh),
+* :class:`GramWire` — the eq.-3 representation (``(G, m_vec)``, additive
+  merge, single psum on a mesh). Its ``backend`` field carries the
+  ``"pallas"``/``"xla"`` choice for the client statistics pass
+  (``backend=None`` resolves to the fused Pallas kernel on TPU and the
+  XLA einsum elsewhere, matching the historical ``fed_fit_sharded_gram``
+  default).
+
+Adding a representation (e.g. a compressed Gram) is one new class — every
+transport and scenario in ``core/engine.py`` composes with it unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from . import activations as acts
+from . import solver
+from .solver import ClientStats, GramStats
+
+
+@runtime_checkable
+class Wire(Protocol):
+    """Structural type every wire implements (see module docstring)."""
+    name: str
+    act: str
+
+    def local_stats(self, X, d): ...
+    def merge(self, a, b): ...
+    def merge_many(self, stats_list): ...
+    def merge_tree(self, stats_list): ...
+    def solve(self, stats, lam: float): ...
+    def wire_bytes(self, stats) -> int: ...
+    def stats_bytes(self, n_local: int, m_in: int, c: int) -> int: ...
+    def mesh_reduce(self, stats, axis: str): ...
+
+
+class _WireBase:
+    def merge_many(self, stats_list: Sequence):
+        stats_list = list(stats_list)
+        if not stats_list:
+            raise ValueError("merge_many of zero clients")
+        agg = stats_list[0]
+        for st in stats_list[1:]:
+            agg = self.merge(agg, st)
+        return agg
+
+    def merge_tree(self, stats_list: Sequence):
+        """Pairwise log-depth fold (what a real coordinator pool does)."""
+        items = list(stats_list)
+        if not items:
+            raise ValueError("merge_tree of zero clients")
+        while len(items) > 1:
+            nxt = [self.merge(items[i], items[i + 1])
+                   for i in range(0, len(items) - 1, 2)]
+            if len(items) % 2:
+                nxt.append(items[-1])
+            items = nxt
+        return items[0]
+
+    def _k(self, c: int) -> int:
+        # per-output F stacks (k == c) except the shared-F identity path
+        return 1 if acts.get(self.act).name == "identity" else c
+
+
+@dataclasses.dataclass(frozen=True)
+class SvdWire(_WireBase):
+    """The paper's eq.-5 wire: clients publish ``(U·S, m_vec)``."""
+    act: str = "logistic"
+    dtype: Any = jnp.float32
+    add_bias: bool = True
+
+    name = "svd"
+
+    def local_stats(self, X, d) -> ClientStats:
+        return solver.client_stats(X, d, act=self.act,
+                                   add_bias=self.add_bias,
+                                   dtype=self.dtype)
+
+    def merge(self, a: ClientStats, b: ClientStats) -> ClientStats:
+        return solver.merge_stats(a, b)
+
+    def merge_oneshot(self, stats_list) -> ClientStats:
+        """One wide SVD over all partials (what a mesh all_gather feeds)."""
+        return solver.merge_many(stats_list)
+
+    def solve(self, stats: ClientStats, lam: float = 1e-3) -> jnp.ndarray:
+        return solver.solve_weights(stats, lam)
+
+    def wire_bytes(self, stats: ClientStats) -> int:
+        itemsize = jnp.dtype(stats.U.dtype).itemsize
+        return int((stats.U.size + stats.m_vec.size + 1) * itemsize)
+
+    def stats_bytes(self, n_local: int, m_in: int, c: int) -> int:
+        mb = m_in + (1 if self.add_bias else 0)
+        r = min(mb, n_local)
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return int((self._k(c) * mb * r + mb * c + 1) * itemsize)
+
+    def mesh_reduce(self, st: ClientStats, axis: str) -> ClientStats:
+        # "upload" = all_gather of every client's factors, then the
+        # coordinator's one-shot Iwen-Ong merge, replicated per device
+        US = jax.lax.all_gather(st.US, axis)            # (Pₐ, k, m, r)
+        m_vec = jax.lax.psum(st.m_vec, axis)            # Σ m_p (eq. 10)
+        Pn, k, m, r = US.shape
+        wide = jnp.moveaxis(US, 0, -2).reshape(k, m, Pn * r)
+        U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
+        rr = min(m, Pn * r)
+        return ClientStats(U=U[..., :rr], s=s[..., :rr], m_vec=m_vec,
+                           n=jax.lax.psum(st.n, axis))
+
+
+@dataclasses.dataclass(frozen=True)
+class GramWire(_WireBase):
+    """The eq.-3 wire: clients publish ``(G, m_vec)``; merge is addition."""
+    act: str = "logistic"
+    backend: Any = "xla"        # "pallas" | "xla" | None (auto by platform)
+    dtype: Any = jnp.float32
+    add_bias: bool = True
+
+    name = "gram"
+
+    def _backend(self) -> str:
+        if self.backend is None:
+            return "pallas" if jax.default_backend() == "tpu" else "xla"
+        return self.backend
+
+    def local_stats(self, X, d) -> GramStats:
+        return solver.client_gram_stats(X, d, act=self.act,
+                                        add_bias=self.add_bias,
+                                        dtype=self.dtype,
+                                        backend=self._backend())
+
+    def merge(self, a: GramStats, b: GramStats) -> GramStats:
+        return solver.merge_gram(a, b)
+
+    def solve(self, stats: GramStats, lam: float = 1e-3) -> jnp.ndarray:
+        return solver.solve_weights_gram(stats, lam)
+
+    def wire_bytes(self, stats: GramStats) -> int:
+        itemsize = jnp.dtype(stats.G.dtype).itemsize
+        return int((stats.G.size + stats.m_vec.size + 1) * itemsize)
+
+    def stats_bytes(self, n_local: int, m_in: int, c: int) -> int:
+        mb = m_in + (1 if self.add_bias else 0)
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return int((self._k(c) * mb * mb + mb * c + 1) * itemsize)
+
+    def mesh_reduce(self, st: GramStats, axis: str) -> GramStats:
+        return GramStats(G=jax.lax.psum(st.G, axis),
+                         m_vec=jax.lax.psum(st.m_vec, axis),
+                         n=jax.lax.psum(st.n, axis))
+
+
+WIRES = {"svd": SvdWire, "gram": GramWire}
+
+
+def get_wire(spec, act: str = "logistic", backend: Any = "xla",
+             dtype: Any = jnp.float32) -> Wire:
+    """Resolve a wire name (``"svd"``/``"gram"``) or pass an instance through."""
+    if not isinstance(spec, str):
+        return spec
+    if spec not in WIRES:
+        raise ValueError(f"unknown wire {spec!r} (expected 'svd'|'gram')")
+    if spec == "gram":
+        return GramWire(act=act, backend=backend, dtype=dtype)
+    return SvdWire(act=act, dtype=dtype)

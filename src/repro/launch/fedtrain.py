@@ -1,23 +1,26 @@
 """Federated training launcher — the paper's end-to-end driver.
 
-Simulates P clients over a (synthetic stand-in of a) paper dataset,
-runs the single-round analytic federation, and prints the paper's four
-metrics: accuracy, train time (slowest client + coordinator), summed CPU
-time, and Wh.
+Simulates P clients over a (synthetic stand-in of a) paper dataset, runs
+one analytic federation round through ``core/engine.FederationEngine``
+(wire × transport × scenario), and prints the paper's four metrics:
+accuracy, train time (slowest client + coordinator), summed CPU time,
+and Wh (process-CPU metered) — plus the wire's upload bytes.
 
 ``PYTHONPATH=src python -m repro.launch.fedtrain --dataset higgs
---clients 1000 --partition pathological``
+--clients 1000 --partition pathological --wire gram --transport stream
+--scenario "dropout=0.3,late_join=0.2"``
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
-from repro.core import activations as acts
-from repro.core import federated, predict_labels
+from repro.core import predict_labels
+from repro.core.engine import FederationEngine, TRANSPORTS
+from repro.core.scenario import Scenario
 from repro.data import partition, synthetic
-from repro.energy import watt_hours
 
 
 def main():
@@ -29,31 +32,57 @@ def main():
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--partition", default="iid",
                     choices=sorted(partition.PARTITIONERS))
+    ap.add_argument("--wire", default="svd", choices=["svd", "gram"])
+    ap.add_argument("--transport", default="local",
+                    choices=list(TRANSPORTS))
+    ap.add_argument("--backend", default=None, choices=["xla", "pallas"],
+                    help="gram-wire client pass (default: pallas on TPU, "
+                         "xla elsewhere)")
+    ap.add_argument("--scenario", default="none",
+                    help='availability spec, e.g. '
+                         '"dropout=0.3,late_join=0.2,straggler_frac=0.1,'
+                         'straggler_delay=0.5" (see core/scenario.py)')
+    ap.add_argument("--chunks", type=int, default=4,
+                    help="chunks per client on the stream transport")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    scenario = Scenario.parse(args.scenario)
+    # --partition/--seed are the defaults; an explicit scenario key wins
+    if "partition" not in args.scenario:
+        scenario = dataclasses.replace(scenario, partition=args.partition)
+    if "seed" not in args.scenario:
+        scenario = dataclasses.replace(scenario, seed=args.seed)
 
     X, y = synthetic.generate(args.dataset, scale=args.scale,
                               seed=args.seed)
     (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
     P = min(args.clients, len(ytr) // 2)
-    parts = partition.partition(args.partition, Xtr, ytr, P,
-                                seed=args.seed)
+    engine = FederationEngine(wire=args.wire, transport=args.transport,
+                              scenario=scenario, act="logistic",
+                              lam=args.lam, backend=args.backend,
+                              chunks=args.chunks, warmup=True)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
-          f"({args.partition})")
+          f"({scenario.partition}), wire={args.wire} "
+          f"transport={args.transport}")
 
-    tf = federated.fed_fit_timed(
-        [p[0] for p in parts],
-        [acts.encode_labels(p[1], 2) for p in parts],
-        act="logistic", lam=args.lam)
-    pred = predict_labels(tf.W, Xte, act="logistic")
+    report = engine.run_dataset(Xtr, ytr, P, n_classes=2)
+    roles = report.roles
+    pred = predict_labels(report.W, Xte, act="logistic")
     acc = float((np.asarray(pred) == yte).mean())
+    print(f"[fedtrain] roles: {len(roles.on_time)} on-time, "
+          f"{len(roles.late)} late-join, {len(roles.dropped)} dropped "
+          f"({report.n_samples} samples federated)")
     print(f"[fedtrain] single round — accuracy {acc:.4f}")
     print(f"[fedtrain] train time (slowest client + coordinator): "
-          f"{tf.train_time:.3f}s")
-    print(f"[fedtrain] sum of CPU time: {tf.cpu_time:.3f}s "
-          f"({watt_hours(tf.cpu_time) * 1000:.3f} mWh @65W)")
+          f"{report.train_time:.3f}s")
+    print(f"[fedtrain] sum of CPU time: {report.cpu_time:.3f}s | "
+          f"metered process CPU {report.cpu_seconds:.3f}s "
+          f"({report.wh * 1000:.3f} mWh @65W)")
+    print(f"[fedtrain] wire bytes uploaded ({args.wire}): "
+          f"{report.wire_bytes / 1024:.1f} KiB")
 
 
 if __name__ == "__main__":

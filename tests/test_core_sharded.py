@@ -49,6 +49,27 @@ _SCRIPT = textwrap.dedent("""
                                   mesh=mesh)
     np.testing.assert_allclose(np.asarray(W_auto), np.asarray(W_cen),
                                rtol=5e-3, atol=5e-4)
+
+    # engine mesh transport under a scenario: dropout shrinks the union,
+    # and the surviving sample count (uneven 42/43-sized clients) need
+    # not divide 8 devices -> exercises the zero-contribution padding
+    from repro.core.engine import FederationEngine
+    from repro.core.scenario import Scenario
+    parts = np.array_split(np.arange(n), 12)
+    pX = [X[p] for p in parts]
+    pD = [D[p] for p in parts]
+    sc = Scenario(dropout=0.4, seed=1)   # 299 surviving samples: 299 % 8
+    roles = sc.roles(12)                 # != 0, so the mesh path pads
+    for wire in ("svd", "gram"):
+        eng = FederationEngine(wire=wire, transport="mesh", scenario=sc,
+                               lam=1e-3, mesh=mesh)
+        rep = eng.run(pX, pD)
+        union = np.concatenate([parts[i] for i in roles.participants])
+        W_union = centralized_solve_gram(X[union], D[union],
+                                         act="logistic", lam=1e-3)
+        np.testing.assert_allclose(np.asarray(rep.W), np.asarray(W_union),
+                                   rtol=5e-3, atol=5e-4)
+        assert rep.wire_bytes > 0
     print("SHARDED_OK")
 """)
 
