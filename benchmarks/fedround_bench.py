@@ -1,0 +1,122 @@
+"""Fed-round perf trajectory: per-client loop vs fleet dispatch.
+
+The machine-readable companion to EXPERIMENTS.md §Fleet dispatch: one
+engine round per (transport × wire × P × client-phase mode), recording
+
+* ``wall_s``      — steady-state wall time of the whole simulated round
+  (second run, every shape compiled — what the fleet axis optimizes:
+  dispatch overhead is *simulation* cost),
+* ``wall_cold_s`` — the first run's wall time including every compile
+  (the bucketing win: O(log n-spread) compile units vs O(distinct
+  shapes)),
+* ``train_time``  — the paper's §4.1 slowest-client + coordinator metric,
+* ``cpu_time``    — Σ client compute + coordinator (the energy proxy),
+* ``wh``          — metered process-CPU watt-hours,
+* ``wire_bytes``  — Σ upload bytes,
+* ``dispatches``  — client-phase compiled-call dispatches
+  (``RoundReport.dispatches``: P on the loop, #buckets on fleet/fused),
+* ``compiles``    — client-phase compile units: distinct shard shapes on
+  the loop, distinct (bucket, stack-height) shapes on fleet/fused.
+
+Writes ``BENCH_fedround.json`` at the repo root (overridable) so CI and
+future sessions can diff perf trajectories —
+``scripts/ci_smoke.sh`` asserts the file exists and is well-formed.
+
+``PYTHONPATH=src python -m benchmarks.fedround_bench [--quick] [--json PATH]``
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import activations as acts
+from repro.core.engine import FederationEngine, _bucket_bound
+from repro.data import partition
+
+from . import common
+
+P_GRID = [10, 100, 1000]
+P_GRID_QUICK = [10, 100]
+MODES = [("loop", {}), ("fleet", {"batch_clients": True}),
+         ("fused", {"fused": True})]
+WIRES = ["gram", "svd"]
+TRANSPORTS = ["local", "stream"]
+JSON_DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fedround.json")
+
+
+def _compile_units(parts, mode):
+    ns = [p[0].shape[0] for p in parts]
+    if mode == "loop":
+        return len(set(ns))
+    # one stacked shape — and so one compile unit — per distinct bucket
+    return len({_bucket_bound(int(n)) for n in ns})
+
+
+def run(scale=None, dataset: str = "susy", quick: bool = False,
+        json_path: str | None = None, seed: int = 0):
+    (Xtr, ytr), _ = common.load(dataset, scale, seed)
+    rows = []
+    for P in (P_GRID_QUICK if quick else P_GRID):
+        if P > len(ytr) // 2:
+            print(f"[bench] skip P={P}: only {len(ytr)} train samples")
+            continue
+        parts = partition.iid(Xtr, ytr, P, seed=seed)
+        pX = [p[0] for p in parts]
+        pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+        for transport in TRANSPORTS:
+            for wire in WIRES:
+                for mode, kw in MODES:
+                    if transport == "stream" and mode != "loop":
+                        # the fleet axis applies to the local transport;
+                        # stream rides the scan-folded chunk path
+                        continue
+                    eng = FederationEngine(wire=wire, transport=transport,
+                                           warmup=True, **kw)
+                    t0 = time.perf_counter()
+                    eng.run(pX, pD)
+                    wall_cold = time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    r = eng.run(pX, pD)
+                    wall = time.perf_counter() - t0
+                    rows.append({
+                        "transport": transport, "wire": wire, "P": P,
+                        "mode": mode,
+                        "wall_s": round(wall, 6),
+                        "wall_cold_s": round(wall_cold, 6),
+                        "train_time": round(r.train_time, 6),
+                        "cpu_time": round(r.cpu_time, 6),
+                        "wh": r.wh,
+                        "wire_bytes": r.wire_bytes,
+                        "dispatches": r.dispatches,
+                        "compiles": _compile_units(parts, mode),
+                    })
+                    print(f"[bench] {transport}/{wire} P={P} {mode}: "
+                          f"wall {wall:.3f}s train {r.train_time:.4f}s "
+                          f"dispatches {r.dispatches}")
+    payload = {
+        "bench": "fedround",
+        "dataset": dataset,
+        "scale": common.DEFAULT_SCALE if scale is None else scale,
+        "rows": rows,
+    }
+    path = json_path or JSON_DEFAULT
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--dataset", default="susy")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="output path "
+                    "(default: BENCH_fedround.json at the repo root)")
+    args = ap.parse_args()
+    run(args.scale, args.dataset, args.quick, args.json)

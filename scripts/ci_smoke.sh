@@ -25,5 +25,23 @@ done
 # and one availability scenario through the launcher
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
   --wire gram --transport local --scenario "dropout=0.25,late_join=0.25"
+# the fleet-batched client phase end-to-end (one dispatch per bucket)
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
+  --wire gram --transport local --scenario none --batch-clients
+
+# machine-readable perf trajectory: BENCH_fedround.json must be produced
+# at the repo root and be well-formed
+python -m benchmarks.run --json --only fedround --quick
+python - <<'PY'
+import json
+d = json.load(open("BENCH_fedround.json"))
+assert d["bench"] == "fedround" and d["rows"], "empty fedround bench"
+need = {"transport", "wire", "P", "mode", "wall_s", "train_time",
+        "cpu_time", "wh", "wire_bytes", "dispatches", "compiles"}
+for r in d["rows"]:
+    missing = need - set(r)
+    assert not missing, f"BENCH_fedround.json row missing {missing}"
+print(f"BENCH_fedround.json OK ({len(d['rows'])} rows)")
+PY
 
 echo "ci_smoke: OK"

@@ -7,9 +7,10 @@ from .federated import (FedONNClient, FedONNCoordinator,
 from .scenario import ClientRoles, Scenario
 from .streaming import StreamingClient, StreamingGramClient
 from .solver import (ClientStats, GramStats, centralized_solve_gram,
-                     client_gram_stats, client_stats, merge_gram, merge_many,
-                     merge_stats, predict, predict_labels, solve_weights,
-                     solve_weights_gram)
+                     client_gram_stats, client_gram_stats_fleet,
+                     client_stats, client_stats_fleet, gram_stats_scan,
+                     merge_gram, merge_many, merge_stats, predict,
+                     predict_labels, solve_weights, solve_weights_gram)
 from .wire import GramWire, SvdWire, Wire, get_wire
 
 __all__ = [
@@ -21,7 +22,8 @@ __all__ = [
     "fed_fit", "fed_fit_timed",
     "StreamingClient", "StreamingGramClient",
     "ClientStats", "GramStats", "centralized_solve_gram",
-    "client_gram_stats", "client_stats", "merge_gram", "merge_many",
+    "client_gram_stats", "client_gram_stats_fleet", "client_stats",
+    "client_stats_fleet", "gram_stats_scan", "merge_gram", "merge_many",
     "merge_stats", "predict", "predict_labels", "solve_weights",
     "solve_weights_gram",
 ]

@@ -20,6 +20,22 @@ engine composes the axes instead (DESIGN.md §7):
 * **scenario**  — who participates and when (``core/scenario.py``:
   partition strategy, dropout, late-join admission, stragglers).
 
+The local transport's client phase has three gears (DESIGN.md §8):
+
+* the **per-client loop** (default) — one dispatch per participant,
+* ``batch_clients=True`` — participants are grouped into power-of-two
+  sample-count *buckets*, each bucket zero-padded and stacked into one
+  ``Wire.local_stats_batch`` dispatch (compile count O(log n-spread)
+  instead of O(distinct shapes)); per-client statistics still
+  materialize, so the merge/solve is byte-for-byte the loop path's — on
+  the gram wire the returned ``W`` bit-matches the loop (tested),
+* ``fused=True`` — per-client statistics never materialize: each bucket
+  runs a single jitted stats → leading-axis-merge program with donated
+  input buffers, and a round with one bucket and no late joiners is ONE
+  compiled program ending in the solve. Fastest, but the leading-axis
+  merge reorders float additions, so parity with the loop is to rounding
+  (not bitwise).
+
 Every run returns a :class:`RoundReport` with the paper's §4.1 metrics —
 train time (slowest client + coordinator), Σ CPU, Wh from process-CPU
 metering (``energy/meter.py``) — plus the per-wire upload bytes and the
@@ -40,7 +56,7 @@ import numpy as np
 from . import activations as acts
 from .scenario import ClientRoles, Scenario
 from .util import add_bias, as_2d
-from .wire import Wire, get_wire
+from .wire import Wire, _WireBase, get_wire
 from ..energy import EnergyMeter, watt_hours
 from ..sharding import shard_map_compat
 
@@ -62,6 +78,10 @@ class RoundReport:
     * ``wire_bytes``  = Σ upload bytes over participants for this wire
       (on the mesh transport the devices are the uploading clients, so
       this counts one upload per device),
+    * ``dispatches``  = client-phase compiled-call dispatches: one per
+      participant on the per-client loop, one per shape bucket on the
+      batched/fused paths, one collective on the mesh — the §4.1
+      dispatch-overhead axis the fleet path collapses,
     * ``W_first``     = the model after the on-time group only (present
       iff the scenario had late joiners; the final ``W`` admits them).
 
@@ -77,6 +97,7 @@ class RoundReport:
     n_samples: int
     cpu_seconds: float = 0.0
     rounds: int = 1
+    dispatches: int = 0
     W_first: Optional[jnp.ndarray] = None
 
     @property
@@ -111,6 +132,14 @@ class FederationEngine:
     (default: a 1-D mesh over all local devices). ``warmup=True`` runs an
     untimed compile pass before the timed client loop so ``client_times``
     measure steady-state (see :func:`~.federated.fed_fit_timed`).
+
+    ``batch_clients=True`` turns the local transport's client phase into
+    the fleet-batched bucket dispatch (one ``Wire.local_stats_batch``
+    call per power-of-two sample-count bucket, bit-identical fold —
+    module docstring); ``fused=True`` (implies ``batch_clients``)
+    additionally fuses stats → merge (→ solve, when a single bucket
+    covers the round) into one jitted program per bucket with donated
+    input buffers.
     """
 
     def __init__(self, wire: Any = "svd", transport: str = "local",
@@ -118,7 +147,8 @@ class FederationEngine:
                  act: str = "logistic", lam: float = 1e-3,
                  backend: Any = "xla", tree: bool = True, chunks: int = 4,
                  warmup: bool = False, mesh=None, axis: str = "data",
-                 dtype: Any = jnp.float32):
+                 dtype: Any = jnp.float32, batch_clients: bool = False,
+                 fused: bool = False):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
@@ -132,6 +162,10 @@ class FederationEngine:
         self.warmup = warmup
         self.mesh = mesh
         self.axis = axis
+        self.fused = bool(fused) and hasattr(self.wire, "fleet_stats") \
+            and hasattr(self.wire, "merge_axis")
+        self.batch_clients = bool(batch_clients) or self.fused
+        self._fused_cache = {}
 
     # ------------------------------------------------------------ entry
     def run(self, parts_X: Sequence, parts_d: Sequence) -> RoundReport:
@@ -168,6 +202,11 @@ class FederationEngine:
         # stream transport: the chunk-folding edge client — each chunk's
         # statistics merge into the running aggregate, data is never
         # held whole (StreamingClient semantics as a transport)
+        chunked = getattr(self.wire, "local_stats_chunked", None)
+        if chunked is not None:
+            # additive wires fold the chunk axis inside one lax.scan
+            # program (O(c·m²) carry) instead of a Python merge loop
+            return chunked(X, d, self.chunks)
         agg = None
         for idx in np.array_split(np.arange(X.shape[0]),
                                   min(self.chunks, X.shape[0])):
@@ -179,8 +218,28 @@ class FederationEngine:
         return self.wire.merge_tree(stats_list) if self.tree else \
             self.wire.merge_many(stats_list)
 
+    def _coordinator(self, stats, roles):
+        """Shared merge → (first solve →) solve tail, timed."""
+        t0 = time.perf_counter()
+        agg = self._fold([stats[i] for i in roles.on_time])
+        W_first = None
+        if roles.late:
+            # first solve from the on-time group — a usable model — then
+            # admit the late joiners incrementally (paper §3.2)
+            W_first = self.wire.solve(agg, self.lam)
+            jax.block_until_ready(W_first)
+            for i in roles.late:
+                agg = self.wire.merge(agg, stats[i])
+        W = self.wire.solve(agg, self.lam)
+        jax.block_until_ready(W)
+        return W, W_first, time.perf_counter() - t0
+
     def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
         roles = self.scenario.roles(len(parts_X))
+        if self.batch_clients and self.transport == "local":
+            if self.fused:
+                return self._run_fused(parts_X, parts_d, roles)
+            return self._run_batched(parts_X, parts_d, roles)
         if self.warmup and roles.participants:
             # compile pass at the first participant's real shapes so the
             # timed loop below measures steady-state execution
@@ -198,23 +257,195 @@ class FederationEngine:
             n_samples += int(parts_X[i].shape[0])
         wire_bytes = sum(self.wire.wire_bytes(stats[i])
                          for i in roles.participants)
-        t0 = time.perf_counter()
-        agg = self._fold([stats[i] for i in roles.on_time])
-        W_first = None
-        if roles.late:
-            # first solve from the on-time group — a usable model — then
-            # admit the late joiners incrementally (paper §3.2)
-            W_first = self.wire.solve(agg, self.lam)
-            jax.block_until_ready(W_first)
-            for i in roles.late:
-                agg = self.wire.merge(agg, stats[i])
-        W = self.wire.solve(agg, self.lam)
-        jax.block_until_ready(W)
-        coordinator_time = time.perf_counter() - t0
+        W, W_first, coordinator_time = self._coordinator(stats, roles)
         return RoundReport(W=W, client_times=times,
                            coordinator_time=coordinator_time,
                            wire_bytes=wire_bytes, roles=roles,
-                           n_samples=n_samples, W_first=W_first)
+                           n_samples=n_samples, W_first=W_first,
+                           dispatches=len(roles.participants))
+
+    # -------------------------------------------- fleet-batched client phase
+    def _buckets(self, parts_X, idxs):
+        """Group client indices by power-of-two padded sample count.
+
+        Compile count per round becomes O(log n-spread) — every client
+        whose shard size shares a power-of-two ceiling lands in the same
+        stacked shape — instead of O(distinct shard shapes) on the
+        per-client loop (DESIGN.md §8).
+        """
+        buckets = {}
+        for i in idxs:
+            buckets.setdefault(_bucket_bound(int(parts_X[i].shape[0])),
+                               []).append(i)
+        return sorted(buckets.items())
+
+    def _stack_bucket(self, parts_X, parts_d, idxs, bound):
+        """Stack a bucket's shards into zero-padded (P_b, bound, ·) arrays.
+
+        Pad rows are all-zero in X (the wire supplies the bias column as
+        the validity mask) and carry the activation midpoint ``f(0)`` in
+        D so ``f_inv`` stays finite — exactly the mesh transport's
+        padding convention (:func:`pad_for_mesh`).
+        """
+        np_dtype = np.dtype(getattr(self.wire, "dtype", np.float32))
+        m_in = parts_X[idxs[0]].shape[1]
+        c = parts_d[idxs[0]].shape[1]
+        mid = float(acts.get(self.wire.act).f(
+            jnp.zeros((), jnp.float32)))
+        Xs = np.zeros((len(idxs), bound, m_in), np_dtype)
+        Ds = np.full((len(idxs), bound, c), mid, np_dtype)
+        ns = np.zeros((len(idxs),), np.int32)
+        for row, i in enumerate(idxs):
+            n = int(parts_X[i].shape[0])
+            Xs[row, :n] = np.asarray(parts_X[i], np_dtype)
+            Ds[row, :n] = np.asarray(parts_d[i], np_dtype)
+            ns[row] = n
+        return Xs, Ds, ns
+
+    @staticmethod
+    def _share_times(time_by, idxs, ns, dt):
+        """Attribute one bucket dispatch's wall time by sample share."""
+        total = int(ns.sum())
+        for i, n in zip(idxs, ns):
+            time_by[i] = dt * (int(n) / total if total else 1 / len(idxs))
+
+    def _run_batched(self, parts_X, parts_d, roles) -> RoundReport:
+        stats, time_by, dispatches = {}, {}, 0
+        for bound, idxs in self._buckets(parts_X, roles.participants):
+            if bound == 0:
+                # empty shards: per-client call (their statistics are
+                # exactly zero but still count one upload, as on the loop)
+                for i in idxs:
+                    t0 = time.perf_counter()
+                    stats[i] = self.wire.local_stats(parts_X[i],
+                                                     parts_d[i])
+                    jax.block_until_ready(stats[i])
+                    time_by[i] = time.perf_counter() - t0
+                    dispatches += 1
+                continue
+            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, idxs, bound)
+            if self.warmup:
+                # compile this bucket's stacked shape once, untimed
+                jax.block_until_ready(
+                    self.wire.local_stats_batch(Xs, Ds, ns))
+            t0 = time.perf_counter()
+            batch = self.wire.local_stats_batch(Xs, Ds, ns)
+            jax.block_until_ready(batch)
+            # a wire riding _WireBase's default batch (a per-client loop
+            # over the stack) really dispatches once per client — keep
+            # the dispatch metric honest for custom wires
+            native = type(self.wire).local_stats_batch \
+                is not _WireBase.local_stats_batch
+            dispatches += 1 if native else len(idxs)
+            self._share_times(time_by, idxs, ns,
+                              time.perf_counter() - t0)
+            stats.update(zip(idxs, batch))
+        if self.warmup and roles.participants:
+            i0 = roles.participants[0]
+            jax.block_until_ready(self.wire.solve(
+                self.wire.merge(stats[i0], stats[i0]), self.lam))
+        wire_bytes = sum(self.wire.wire_bytes(stats[i])
+                         for i in roles.participants)
+        W, W_first, coordinator_time = self._coordinator(stats, roles)
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=coordinator_time, wire_bytes=wire_bytes,
+            roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=dispatches)
+
+    # ------------------------------------------------------ fused round
+    def _fused_fn(self, with_solve: bool):
+        """stats → leading-axis merge (→ solve) as ONE jitted program.
+
+        The stacked client buffers are donated (no-op on CPU, where XLA
+        does not implement donation) — at P=1000 the (P, n_max, m) stack
+        is the round's dominant allocation and the program may reuse it
+        in place.
+        """
+        if with_solve not in self._fused_cache:
+            wire, lam = self.wire, self.lam
+
+            def prog(Xs, Ds, ns):
+                agg = wire.merge_axis(wire.fleet_stats(Xs, Ds, ns))
+                return wire.solve(agg, lam) if with_solve else agg
+
+            donate = (0, 1) if jax.default_backend() != "cpu" else ()
+            self._fused_cache[with_solve] = jax.jit(
+                prog, donate_argnums=donate)
+        return self._fused_cache[with_solve]
+
+    def _run_fused(self, parts_X, parts_d, roles) -> RoundReport:
+        time_by = {i: 0.0 for i in roles.participants}
+        on_buckets = [b for b in self._buckets(parts_X, roles.on_time)
+                      if b[0] > 0]
+        late_buckets = [b for b in self._buckets(parts_X, roles.late)
+                        if b[0] > 0]
+        # empty shards contribute exactly-zero statistics: they never
+        # enter a fused program, only the (analytic) upload accounting
+        m_in = parts_X[0].shape[1] if len(parts_X) else 0
+        c = parts_d[0].shape[1] if len(parts_d) else 1
+        wire_bytes = sum(
+            self.wire.stats_bytes(int(parts_X[i].shape[0]), m_in, c)
+            for i in roles.participants)
+        dispatches = 0
+
+        def run_bucket(fn, idxs, bound):
+            nonlocal dispatches
+            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, idxs, bound)
+            if self.warmup:
+                jax.block_until_ready(
+                    fn(*self._stack_bucket(parts_X, parts_d, idxs,
+                                           bound)))
+            t0 = time.perf_counter()
+            out = fn(Xs, Ds, ns)
+            jax.block_until_ready(out)
+            dispatches += 1
+            self._share_times(time_by, idxs, ns,
+                              time.perf_counter() - t0)
+            return out
+
+        # a scenario with late joiners must produce W_first even if every
+        # late shard is empty (late_buckets drops bound-0 shards), so the
+        # one-shot fusion keys on the roles, not the bucket list
+        one_shot = len(on_buckets) == 1 and not roles.late
+        if one_shot:
+            # the whole round — every client's pass, the merge, and the
+            # solve — is one compiled dispatch
+            bound, idxs = on_buckets[0]
+            W = run_bucket(self._fused_fn(True), idxs, bound)
+            W_first, coordinator_time = None, 0.0
+        else:
+            partial = self._fused_fn(False)
+            on_aggs = [run_bucket(partial, idxs, bound)
+                       for bound, idxs in on_buckets]
+            late_aggs = [run_bucket(partial, idxs, bound)
+                         for bound, idxs in late_buckets]
+            t0 = time.perf_counter()
+            agg = self.wire.merge_many(on_aggs) if on_aggs else None
+            W_first = None
+            if agg is None:
+                # every on-time shard was empty: fall back to their
+                # (zero) per-client statistics so the solve still runs
+                agg = self._fold([self.wire.local_stats(parts_X[i],
+                                                        parts_d[i])
+                                  for i in roles.on_time])
+            if roles.late:
+                W_first = self.wire.solve(agg, self.lam)
+                jax.block_until_ready(W_first)
+                for st in late_aggs:
+                    agg = self.wire.merge(agg, st)
+            W = self.wire.solve(agg, self.lam)
+            jax.block_until_ready(W)
+            coordinator_time = time.perf_counter() - t0
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=coordinator_time, wire_bytes=wire_bytes,
+            roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=dispatches)
 
     # -------------------------------------------------------- mesh path
     def _run_mesh(self, parts_X, parts_d) -> RoundReport:
@@ -290,7 +521,17 @@ class FederationEngine:
         return RoundReport(W=W, client_times=client_times,
                            coordinator_time=coordinator_time,
                            wire_bytes=wire_bytes, roles=roles,
-                           n_samples=n)
+                           n_samples=n, dispatches=1)
+
+
+def _bucket_bound(n: int) -> int:
+    """Power-of-two ceiling of a shard's sample count (0 for empty)."""
+    if n <= 0:
+        return 0
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
 
 
 def make_client_mesh(n_clients_axis: Optional[int] = None,

@@ -22,13 +22,21 @@ method usable as an analytic large-vocab readout, see ``core/head.py``).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import jax.scipy.linalg as jsp_linalg
 
 from . import activations as acts
 from .util import add_bias as _add_bias, as_2d as _as_2d
+
+# sample-axis block of the fixed-shape chunked accumulation (matches the
+# Pallas kernels' default bn tile). Keeping every chunk the same compiled
+# shape is what makes zero-padding and fleet-stacking bitwise exact — see
+# gram_stats_scan.
+GRAM_BLOCK_N = 512
 
 
 class ClientStats(NamedTuple):
@@ -152,6 +160,59 @@ class GramStats(NamedTuple):
     n: jnp.ndarray
 
 
+@functools.partial(jax.jit, static_argnames=("block",))
+def gram_stats_scan(X, fp, dbar, *, block: int = GRAM_BLOCK_N):
+    """Fixed-block streaming accumulation of the eq.-3 statistics.
+
+    ``X`` (n, m_b), ``fp`` (n, k) per-output F diagonals (k == 1 for the
+    shared-F identity path), ``dbar`` (n, c) → ``(G (k, m_b, m_b),
+    mvec (m_b, c))``. The sample axis is zero-padded to a ``block``
+    multiple, reshaped to a chunk axis, and folded with ``lax.scan`` —
+    the carry is the O(k·m²) running statistics, and no intermediate ever
+    exceeds O(k·block·m) (the XLA analogue of the Pallas kernels' HBM→VMEM
+    streaming; the old one-shot einsum materialized O(c·n·m)).
+
+    Because every chunk is the *same compiled shape*, the result is
+    bitwise identical whether the same rows arrive alone, zero-padded to
+    a larger block multiple, or stacked under ``vmap`` — the property the
+    fleet-batched engine path's bit-parity rests on
+    (tests/test_fleet_batch.py).
+    """
+    n, mb = X.shape
+    k, c = fp.shape[1], dbar.shape[1]
+    npad = -(-max(n, 1) // block) * block
+    if npad != n:
+        X = jnp.pad(X, ((0, npad - n), (0, 0)))
+        fp = jnp.pad(fp, ((0, npad - n), (0, 0)))
+        dbar = jnp.pad(dbar, ((0, npad - n), (0, 0)))
+    Xc = X.reshape(-1, block, mb)
+    fpc = fp.reshape(-1, block, k)
+    dbc = dbar.reshape(-1, block, c)
+
+    def fold(carry, xs):
+        G, mv = carry
+        Xb, fb, db = xs
+        XF = jnp.einsum("nm,nk->knm", Xb, fb)
+        return (G + jnp.einsum("knm,knp->kmp", XF, XF),
+                mv + Xb.T @ (fb * fb * db)), None
+
+    init = (jnp.zeros((k, mb, mb), X.dtype), jnp.zeros((mb, c), X.dtype))
+    (G, mvec), _ = jax.lax.scan(fold, init, (Xc, fpc, dbc))
+    return G, mvec
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("act", "add_bias", "dtype", "block"))
+def _gram_stats_xla(X, D, act="logistic", add_bias: bool = True,
+                    dtype=jnp.float32, block: int = GRAM_BLOCK_N):
+    """One jitted program per client shape: prep + chunked accumulation."""
+    X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
+    fpk = jnp.ones((X.shape[0], 1), X.dtype) if act.name == "identity" \
+        else fp
+    G, m_vec = gram_stats_scan(X, fpk, d_bar, block=block)
+    return GramStats(G=G, m_vec=m_vec, n=jnp.asarray(X.shape[0], dtype))
+
+
 def client_gram_stats(X, D, act="logistic", add_bias: bool = True,
                       dtype=jnp.float32, backend: str = "xla",
                       interpret: Optional[bool] = None) -> GramStats:
@@ -159,60 +220,162 @@ def client_gram_stats(X, D, act="logistic", add_bias: bool = True,
 
     ``backend`` selects how the per-output Gram stack is computed:
 
-    * ``"xla"``    — einsum reference. Simple, but the nonlinear path
-      materializes the O(c·n·m) tensor ``XF`` — fine on a server, the
-      memory blowup the paper's edge story forbids on-device.
+    * ``"xla"``    — :func:`gram_stats_scan`: a fixed-block ``lax.scan``
+      accumulation (O(c·block·m) transient, never the O(c·n·m) blowup the
+      old einsum reference paid), jitted per client shape.
     * ``"pallas"`` — the fused streaming kernel
-      (``kernels.gram_stats_multi``): the sample axis streams HBM→VMEM,
-      working set 3 tiles per class, never O(c·n·m). ``interpret`` defaults
-      by backend (interpret-mode off-TPU so tests run anywhere). The
-      kernel accumulates in float32, so non-float32 ``dtype`` requests
-      (e.g. fp64 exactness tests) fall back to the XLA path, which honors
-      ``dtype`` end to end.
+      (``kernels.gram_stats_multi``, or ``gram_stats_shared`` on the
+      identity path, whose c-column moment output means X is read exactly
+      once): the sample axis streams HBM→VMEM, working set 3 tiles per
+      class. ``interpret`` defaults by backend (interpret-mode off-TPU so
+      tests run anywhere). The kernel accumulates in float32, so
+      non-float32 ``dtype`` requests (e.g. fp64 exactness tests) fall
+      back to the XLA path, which honors ``dtype`` end to end.
     """
-    X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
     if backend == "pallas" and jnp.dtype(dtype) != jnp.float32:
         backend = "xla"
     if backend == "pallas":
         from ..kernels import ops as _kops
+        X, d_bar, fp, act = _prep(X, D, act, add_bias, dtype)
         if act.name == "identity":
-            # shared F = I: one kernel pass builds the Gram; the moment
-            # needs every output column, so it is recomputed densely in
-            # XLA (O(n·m·c), no blowup) rather than fused — the kernel's
-            # single-column moment output is discarded. A c-column fused
-            # identity variant would save one extra read of X.
-            ones = jnp.ones((X.shape[0], 1), X.dtype)
-            G, _ = _kops.client_gram_stats_fused(X, d_bar[:, :1], ones,
-                                                 interpret=interpret)
-            return GramStats(G=G.astype(dtype),
-                             m_vec=(X.T @ d_bar).astype(dtype),
-                             n=jnp.asarray(X.shape[0], dtype))
-        G, m_vec = _kops.client_gram_stats_fused(X, d_bar, fp,
-                                                 interpret=interpret)
+            # shared F = I: one kernel pass emits the Gram AND the full
+            # (m, c) moment block (kernels.gram_stats_shared)
+            G, m_vec = _kops.client_gram_stats_shared(X, d_bar,
+                                                      interpret=interpret)
+        else:
+            G, m_vec = _kops.client_gram_stats_fused(X, d_bar, fp,
+                                                     interpret=interpret)
         return GramStats(G=G.astype(dtype), m_vec=m_vec.astype(dtype),
                          n=jnp.asarray(X.shape[0], dtype))
     if backend != "xla":
         raise ValueError(f"unknown backend {backend!r}")
-    m_vec = X.T @ (fp * fp * d_bar)
-    if act.name == "identity":
-        G = (X.T @ X)[None]
-    else:
-        XF = jnp.einsum("nm,nc->cnm", X, fp)
-        G = jnp.einsum("cnm,cnp->cmp", XF, XF)
-    return GramStats(G=G, m_vec=m_vec, n=jnp.asarray(X.shape[0], dtype))
+    return _gram_stats_xla(X, _as_2d(jnp.asarray(D)), act=act,
+                           add_bias=add_bias, dtype=dtype)
 
 
 def merge_gram(a: GramStats, b: GramStats) -> GramStats:
     return GramStats(a.G + b.G, a.m_vec + b.m_vec, a.n + b.n)
 
 
-def solve_weights_gram(stats: GramStats, lam: float = 1e-3) -> jnp.ndarray:
+def _fleet_mask(Xs, ns, dtype):
+    """(P, n_max) validity mask from per-client sample counts."""
+    npad = Xs.shape[1]
+    return (jnp.arange(npad)[None, :] < ns[:, None]).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "add_bias", "dtype",
+                                             "backend", "block",
+                                             "interpret"))
+def client_gram_stats_fleet(Xs, Ds, ns, act="logistic",
+                            add_bias: bool = True, dtype=jnp.float32,
+                            backend: str = "xla",
+                            block: int = GRAM_BLOCK_N,
+                            interpret: Optional[bool] = None) -> GramStats:
+    """Eq.-3 statistics for a whole fleet of clients in ONE dispatch.
+
+    ``Xs`` (P, n_max, m_in) stacked client shards, zero-padded on the
+    sample axis; ``Ds`` (P, n_max, c) targets (pad rows should carry the
+    activation midpoint ``f(0)`` so ``f_inv`` stays tame — any finite
+    value is exact, pad rows are masked out of every statistic); ``ns``
+    (P,) true per-client sample counts. Returns a *stacked*
+    :class:`GramStats` with leading client axis: ``G`` (P, k, m_b, m_b),
+    ``m_vec`` (P, m_b, c), ``n`` (P,).
+
+    The bias column is the validity mask itself (1 on real rows, 0 on
+    pads), so pad rows are all-zero and contribute exactly nothing.
+    ``backend="pallas"`` routes to the fleet kernels
+    (``kernels.gram_stats_fleet[_shared]``, grid (p, c, mi, mj, nk));
+    ``"xla"`` vmaps :func:`gram_stats_scan`. Either way each client's
+    slice is bitwise identical to its per-client
+    :func:`client_gram_stats` result on the same backend.
+    """
+    act = acts.get(act)
+    if backend == "pallas" and jnp.dtype(dtype) != jnp.float32:
+        backend = "xla"
+    Xs = jnp.asarray(Xs, dtype)
+    Ds = jnp.asarray(Ds, dtype)
+    ns = jnp.asarray(ns)
+    mask = _fleet_mask(Xs, ns, dtype)
+    if add_bias:
+        Xs = jnp.concatenate([mask[..., None], Xs], axis=-1)
+    d_bar = act.f_inv(Ds)
+    fp = act.f_prime(d_bar)
+    fpk = mask[..., None] if act.name == "identity" \
+        else fp * mask[..., None]
+    if backend == "pallas":
+        from ..kernels import ops as _kops
+        G, m_vec = _kops.client_gram_stats_fleet(
+            Xs, d_bar, fpk, shared=(act.name == "identity"),
+            interpret=interpret)
+    elif backend == "xla":
+        G, m_vec = jax.vmap(
+            lambda x, f, d: gram_stats_scan(x, f, d, block=block))(
+                Xs, fpk, d_bar)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return GramStats(G=G.astype(dtype), m_vec=m_vec.astype(dtype),
+                     n=ns.astype(dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "add_bias", "dtype"))
+def client_stats_fleet(Xs, Ds, ns, act="logistic", add_bias: bool = True,
+                       dtype=jnp.float32) -> ClientStats:
+    """Paper Alg. 1 for a stacked fleet: batched SVDs, one dispatch.
+
+    Same stacking convention as :func:`client_gram_stats_fleet`. Returns
+    a stacked :class:`ClientStats` (``U`` (P, k, m_b, r), ``s`` (P, k, r),
+    ``m_vec`` (P, m_b, c), ``n`` (P,)) with ``r = min(m_b, n_max)``;
+    all-zero pad rows only add exactly-zero singular directions, so
+    truncating client p to ``min(m_b, n_p)`` columns recovers its
+    per-client factors up to SVD rounding (callers that need the paper's
+    per-client rank — e.g. wire-byte accounting — slice there).
+    """
+    act = acts.get(act)
+    Xs = jnp.asarray(Xs, dtype)
+    Ds = jnp.asarray(Ds, dtype)
+    ns = jnp.asarray(ns)
+    mask = _fleet_mask(Xs, ns, dtype)
+    if add_bias:
+        Xs = jnp.concatenate([mask[..., None], Xs], axis=-1)
+    d_bar = act.f_inv(Ds)
+    fp = act.f_prime(d_bar) * mask[..., None]
+    m_vec = jnp.einsum("pnm,pnc->pmc", Xs, fp * fp * d_bar)
+    if act.name == "identity":
+        U, s, _ = jnp.linalg.svd(jnp.swapaxes(Xs, 1, 2),
+                                 full_matrices=False)
+        U, s = U[:, None], s[:, None]                   # k = 1
+    else:
+        A = jnp.einsum("pnm,pnc->pcmn", Xs, fp)
+        U, s, _ = jnp.linalg.svd(A, full_matrices=False)
+    return ClientStats(U=U, s=s, m_vec=m_vec, n=ns.astype(dtype))
+
+
+def solve_weights_gram(stats: GramStats, lam: float = 1e-3,
+                       method: str = "cholesky") -> jnp.ndarray:
+    """Coordinator solve on the eq.-3 wire: ``(G + λI) w = m_vec``.
+
+    ``G + λI`` is symmetric positive definite (Gram + ridge), so the
+    default factorization is Cholesky (``jax.scipy.linalg.cho_factor`` /
+    ``cho_solve`` — one triangular factor, ~half the FLOPs and better
+    backward stability than LU on SPD systems). ``method="solve"`` is the
+    ``jnp.linalg.solve`` (LU) fallback flag, kept for conditioning
+    comparisons and as an escape hatch; both agree to fp32 rounding
+    (tested).
+    """
     G, m_vec = stats.G, stats.m_vec
     m = G.shape[-1]
     eye = jnp.eye(m, dtype=G.dtype)
+    if method == "cholesky":
+        def solve_one(A, b):
+            return jsp_linalg.cho_solve(jsp_linalg.cho_factor(A), b)
+    elif method == "solve":
+        solve_one = jnp.linalg.solve
+    else:
+        raise ValueError(f"unknown method {method!r} "
+                         "(expected 'cholesky'|'solve')")
     if G.shape[0] == 1:
-        return jnp.linalg.solve(G[0] + lam * eye, m_vec)
-    sol = jax.vmap(lambda Gk, mk: jnp.linalg.solve(Gk + lam * eye, mk),
+        return solve_one(G[0] + lam * eye, m_vec)
+    sol = jax.vmap(lambda Gk, mk: solve_one(Gk + lam * eye, mk),
                    in_axes=(0, 1), out_axes=1)(G, m_vec)
     return sol
 

@@ -4,6 +4,11 @@ A *wire* bundles everything the federation engine needs to know about one
 representation of the paper's client statistics:
 
 * ``local_stats(X, d)``    — the client-side pass (paper Alg. 1),
+* ``local_stats_batch(Xs, Ds, ns)`` — the *fleet* client pass: one
+  dispatch computes every client's statistics from a stacked,
+  zero-padded ``(P, n_max, m)`` input (DESIGN.md §8). The base-class
+  default is the per-client loop, so custom wires compose with the
+  batched engine path unchanged,
 * ``merge(a, b)``          — the associative coordinator merge (Alg. 2),
 * ``merge_many(list)``     — deterministic sequential left fold of
   ``merge`` (merge *topology* — tree vs sequential — is engine policy),
@@ -13,6 +18,12 @@ representation of the paper's client statistics:
   mesh transports where per-client stats never materialize host-side),
 * ``mesh_reduce(stats, axis)`` — the merge expressed as mesh collectives,
   for use inside ``shard_map`` (DESIGN.md §4).
+
+The built-in wires additionally provide ``fleet_stats(Xs, Ds, ns)``
+(stacked statistics with a leading client axis, jit-traceable) and
+``merge_axis(stacked)`` (the merge over that leading axis) — the pair the
+engine's *fused* round path composes into a single stats → merge → solve
+program.
 
 Two implementations wrap ``core/solver.py``:
 
@@ -32,10 +43,11 @@ transport and scenario in ``core/engine.py`` composes with it unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, Sequence, runtime_checkable
+from typing import Any, List, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import activations as acts
 from . import solver
@@ -49,6 +61,7 @@ class Wire(Protocol):
     act: str
 
     def local_stats(self, X, d): ...
+    def local_stats_batch(self, Xs, Ds, ns): ...
     def merge(self, a, b): ...
     def merge_many(self, stats_list): ...
     def merge_tree(self, stats_list): ...
@@ -59,6 +72,18 @@ class Wire(Protocol):
 
 
 class _WireBase:
+    def local_stats_batch(self, Xs, Ds, ns) -> List:
+        """Per-client statistics from a stacked ``(P, n_max, …)`` batch.
+
+        Default: trim each client back to its true ``ns[p]`` rows and run
+        the per-client pass — correct for any wire, one dispatch per
+        client. The built-in wires override this with a true one-dispatch
+        fleet pass.
+        """
+        return [self.local_stats(np.asarray(Xs[p])[:int(n)],
+                                 np.asarray(Ds[p])[:int(n)])
+                for p, n in enumerate(ns)]
+
     def merge_many(self, stats_list: Sequence):
         stats_list = list(stats_list)
         if not stats_list:
@@ -100,6 +125,39 @@ class SvdWire(_WireBase):
                                    add_bias=self.add_bias,
                                    dtype=self.dtype)
 
+    def fleet_stats(self, Xs, Ds, ns) -> ClientStats:
+        """Stacked Alg.-1 statistics, one batched-SVD dispatch."""
+        return solver.client_stats_fleet(Xs, Ds, ns, act=self.act,
+                                         add_bias=self.add_bias,
+                                         dtype=self.dtype)
+
+    def local_stats_batch(self, Xs, Ds, ns) -> List[ClientStats]:
+        st = self.fleet_stats(Xs, Ds, jnp.asarray(ns))
+        # one host materialization, then zero-copy per-client views — P
+        # eager slice dispatches would eat the batching win at P ≫ 1
+        U, s = np.asarray(st.U), np.asarray(st.s)
+        m_vec, n_arr = np.asarray(st.m_vec), np.asarray(st.n)
+        mb = U.shape[-2]
+        out = []
+        for p, n in enumerate(ns):
+            # padded sample columns only add exactly-zero singular
+            # directions; truncating to the true per-client rank recovers
+            # the paper's (m, r) factor and its upload size
+            r = min(mb, int(n))
+            out.append(ClientStats(U=U[p][..., :r], s=s[p][..., :r],
+                                   m_vec=m_vec[p], n=n_arr[p]))
+        return out
+
+    def merge_axis(self, st: ClientStats) -> ClientStats:
+        """Iwen–Ong merge over the leading client axis (one wide SVD)."""
+        US = st.US                                      # (P, k, m, r)
+        Pn, k, m, r = US.shape
+        wide = jnp.moveaxis(US, 0, -2).reshape(k, m, Pn * r)
+        U, s, _ = jnp.linalg.svd(wide, full_matrices=False)
+        rr = min(m, Pn * r)
+        return ClientStats(U=U[..., :rr], s=s[..., :rr],
+                           m_vec=st.m_vec.sum(axis=0), n=st.n.sum())
+
     def merge(self, a: ClientStats, b: ClientStats) -> ClientStats:
         return solver.merge_stats(a, b)
 
@@ -135,11 +193,18 @@ class SvdWire(_WireBase):
 
 @dataclasses.dataclass(frozen=True)
 class GramWire(_WireBase):
-    """The eq.-3 wire: clients publish ``(G, m_vec)``; merge is addition."""
+    """The eq.-3 wire: clients publish ``(G, m_vec)``; merge is addition.
+
+    ``solve_method`` selects the coordinator factorization:
+    ``"cholesky"`` (default — G+λI is SPD) or ``"solve"`` (the
+    ``jnp.linalg.solve`` LU fallback flag; see
+    :func:`solver.solve_weights_gram`).
+    """
     act: str = "logistic"
     backend: Any = "xla"        # "pallas" | "xla" | None (auto by platform)
     dtype: Any = jnp.float32
     add_bias: bool = True
+    solve_method: str = "cholesky"
 
     name = "gram"
 
@@ -154,11 +219,70 @@ class GramWire(_WireBase):
                                         dtype=self.dtype,
                                         backend=self._backend())
 
+    def fleet_stats(self, Xs, Ds, ns) -> GramStats:
+        """Stacked eq.-3 statistics: ONE dispatch for the whole fleet
+        (the Pallas fleet kernel on TPU, a vmapped ``lax.scan`` on XLA).
+        """
+        return solver.client_gram_stats_fleet(Xs, Ds, ns, act=self.act,
+                                              add_bias=self.add_bias,
+                                              dtype=self.dtype,
+                                              backend=self._backend())
+
+    def local_stats_batch(self, Xs, Ds, ns) -> List[GramStats]:
+        st = self.fleet_stats(Xs, Ds, jnp.asarray(ns))
+        # one host materialization, then zero-copy per-client views (P
+        # eager slice dispatches would eat the batching win at P ≫ 1);
+        # each client's slice is bitwise identical to its per-client
+        # local_stats — same fixed block shapes (tests/test_fleet_batch.py)
+        G, m_vec = np.asarray(st.G), np.asarray(st.m_vec)
+        n_arr = np.asarray(st.n)
+        return [GramStats(G=G[p], m_vec=m_vec[p], n=n_arr[p])
+                for p in range(len(ns))]
+
+    def merge_axis(self, st: GramStats) -> GramStats:
+        """The additive merge over the leading client axis (one sum)."""
+        return GramStats(G=st.G.sum(axis=0), m_vec=st.m_vec.sum(axis=0),
+                         n=st.n.sum())
+
+    def local_stats_chunked(self, X, d, chunks: int) -> GramStats:
+        """Edge-client chunk folding as ONE ``lax.scan`` program.
+
+        Semantically the stream transport's per-chunk merge (each chunk's
+        statistics added into the running aggregate, O(c·m²) carry, data
+        never held whole past the activation prep) — but the Python
+        fold over ``np.array_split`` pieces becomes a single scan over a
+        reshaped ``(chunks, ⌈n/chunks⌉, …)`` chunk axis: one dispatch per
+        client instead of one per chunk.
+
+        On the Pallas backend the fused kernel *is* the chunk pass (it
+        already streams the sample axis tile by tile), so the explicit
+        per-chunk kernel fold is kept rather than silently dropping the
+        selected backend for the XLA scan.
+        """
+        n = int(X.shape[0])
+        chunks = max(1, min(int(chunks), n))
+        if self._backend() == "pallas" and \
+                jnp.dtype(self.dtype) == jnp.float32:
+            agg = None
+            for idx in np.array_split(np.arange(n), chunks):
+                st = self.local_stats(X[idx], d[idx])
+                agg = st if agg is None else self.merge(agg, st)
+            return agg
+        X, d_bar, fp, act = solver._prep(X, d, self.act, self.add_bias,
+                                         self.dtype)
+        fpk = jnp.ones((n, 1), X.dtype) if act.name == "identity" else fp
+        G, m_vec = solver.gram_stats_scan(X, fpk, d_bar,
+                                          block=-(-n // chunks))
+        return GramStats(G=G.astype(self.dtype),
+                         m_vec=m_vec.astype(self.dtype),
+                         n=jnp.asarray(n, self.dtype))
+
     def merge(self, a: GramStats, b: GramStats) -> GramStats:
         return solver.merge_gram(a, b)
 
     def solve(self, stats: GramStats, lam: float = 1e-3) -> jnp.ndarray:
-        return solver.solve_weights_gram(stats, lam)
+        return solver.solve_weights_gram(stats, lam,
+                                         method=self.solve_method)
 
     def wire_bytes(self, stats: GramStats) -> int:
         itemsize = jnp.dtype(stats.G.dtype).itemsize

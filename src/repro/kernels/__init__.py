@@ -1,4 +1,6 @@
 from . import ops, ref
-from .gram_stats import gram_stats, gram_stats_multi
+from .gram_stats import (gram_stats, gram_stats_fleet,
+                         gram_stats_fleet_shared, gram_stats_multi,
+                         gram_stats_shared)
 from .decode_attn import decode_gqa
 from .ssd_chunk import ssd_chunk, ssd_forward_pallas

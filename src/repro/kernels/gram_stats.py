@@ -17,7 +17,7 @@ at any size — the green-FL story on TPU).
 The moment vector reuses the already-resident X tile (j == 0 column of the
 grid), which is what "fused" buys over two separate passes.
 
-Two kernels share this mapping:
+Four kernels share this mapping:
 
 * ``gram_stats``       — the shared-F path (identity activation, k == 1):
   one (m, m) Gram and one (m,) moment serve every output column.
@@ -28,6 +28,20 @@ Two kernels share this mapping:
   stack and (m, c) moment block while the VMEM working set stays at 3
   tiles per grid step — never the O(c·n·m) intermediate that the XLA
   ``einsum("nm,nc->cnm", ...)`` reference path materializes.
+* ``gram_stats_shared`` — the shared-F path with a *c-column* moment
+  output: one Gram pass also emits ``mvec = Xᵀ d̄`` for every output
+  column (block (bn, c) of d̄ rides along with the already-resident X
+  tile), so the identity activation never needs a second dense read of X.
+* ``gram_stats_fleet`` / ``gram_stats_fleet_shared`` — the *fleet* axis
+  (DESIGN.md §8): a leading client grid dimension over a stacked,
+  zero-padded (P, n_max, m) input. grid = (p, c, mi, mj, nk) (resp.
+  (p, mi, mj, nk)), so ONE pallas_call emits the whole federation's
+  (P, c, m, m) Gram stack and (P, m, c) moments. Zero pad rows are exact
+  (they contribute nothing to either statistic), and each (p, cls) slice
+  runs the *same tile-shaped dot_generals in the same nk order* as the
+  per-client kernels — the fleet outputs are bitwise identical to P
+  separate per-client calls, which is what lets the batched engine path
+  bit-match the per-client loop (tests/test_fleet_batch.py).
 """
 from __future__ import annotations
 
@@ -188,3 +202,229 @@ def gram_stats_multi(X, Fp, Dbar, *, bm: int = 128, bn: int = 512,
         interpret=interpret,
     )(X, X, Fp, Dbar)
     return G[:, :m, :m], mvec[:m, :]
+
+
+def _kernel_shared(x_i_ref, x_j_ref, fp_ref, dbar_ref, g_ref, m_ref):
+    nk = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(nk == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when((nk == 0) & (j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    fp = fp_ref[...].astype(jnp.float32)          # (bn, 1): shared F diag
+    xi = x_i_ref[...].astype(jnp.float32)         # (bn, bm)
+    xj = x_j_ref[...].astype(jnp.float32)
+    xfi = xi * fp
+    xfj = xj * fp
+    g_ref[...] += jax.lax.dot_general(
+        xfi, xfj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _moment():
+        # all c moment columns ride along with the resident X tile
+        w = fp * fp * dbar_ref[...].astype(jnp.float32)   # (bn, c)
+        m_ref[...] += jax.lax.dot_general(
+            xi, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gram_stats_shared(X, fp, Dbar, *, bm: int = 128, bn: int = 512,
+                      interpret: bool = False):
+    """Shared-F statistics with a multi-column moment: X (n, m), fp (n,),
+    Dbar (n, c) → ``(G (m, m), mvec (m, c))`` float32.
+
+    The k = 1 Gram is identical to :func:`gram_stats`; the moment block
+    carries every output column (``mvec[:, k] = Xᵀ (fp² ⊙ Dbar[:, k])``),
+    computed from the already-resident (bn, bm) X tile at j == 0. This is
+    what closes the identity-activation gap where the fused kernel's
+    single-column moment used to be discarded and ``Xᵀ d̄`` recomputed
+    densely (X is now read exactly once).
+    """
+    n, m = X.shape
+    c = Dbar.shape[1]
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    if (mp, np_) != (m, n):
+        X = jnp.pad(X, ((0, np_ - n), (0, mp - m)))
+        fp = jnp.pad(fp, (0, np_ - n))
+        Dbar = jnp.pad(Dbar, ((0, np_ - n), (0, 0)))
+    fp2 = fp[:, None]
+    gi, gj, gk = mp // bm, mp // bm, np_ // bn
+
+    G, mvec = pl.pallas_call(
+        _kernel_shared,
+        grid=(gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bn, c), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, c), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, X, fp2, Dbar)
+    return G[:m, :m], mvec[:m, :]
+
+
+def _kernel_fleet(x_i_ref, x_j_ref, fp_ref, dbar_ref, g_ref, m_ref):
+    nk = pl.program_id(4)
+    j = pl.program_id(3)
+
+    @pl.when(nk == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when((nk == 0) & (j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    fp = fp_ref[0].astype(jnp.float32)            # (bn, 1): col cls, client p
+    xi = x_i_ref[0].astype(jnp.float32)           # (bn, bm)
+    xj = x_j_ref[0].astype(jnp.float32)
+    xfi = xi * fp
+    xfj = xj * fp
+    g_ref[0, 0] += jax.lax.dot_general(
+        xfi, xfj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _moment():
+        w = fp * fp * dbar_ref[0].astype(jnp.float32)     # (bn, 1)
+        m_ref[0] += jax.lax.dot_general(
+            xi, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gram_stats_fleet(Xs, Fps, Dbars, *, bm: int = 128, bn: int = 512,
+                     interpret: bool = False):
+    """Fleet-batched multi-output statistics over P stacked clients.
+
+    Xs (P, n_max, m); Fps, Dbars (P, n_max, c) → ``(G (P, c, m, m),
+    mvec (P, m, c))`` float32 — ONE pallas_call for the whole federation.
+
+    Grid = (p, c, mi, mj, nk), client outermost (DESIGN.md §8): every
+    (p, cls) slice replays exactly the (mi, mj, nk) schedule of
+    :func:`gram_stats_multi` on client p's rows, so the VMEM working set
+    stays 3 tiles + one (bm, bm) accumulator regardless of P, and each
+    client's output is bitwise what the per-client kernel produces.
+    Clients shorter than n_max are zero-padded (rows with fp = 0
+    contribute exactly nothing to either statistic).
+    """
+    P, n, m = Xs.shape
+    c = Fps.shape[2]
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    if (mp, np_) != (m, n):
+        Xs = jnp.pad(Xs, ((0, 0), (0, np_ - n), (0, mp - m)))
+        Fps = jnp.pad(Fps, ((0, 0), (0, np_ - n), (0, 0)))
+        Dbars = jnp.pad(Dbars, ((0, 0), (0, np_ - n), (0, 0)))
+    gi, gj, gk = mp // bm, mp // bm, np_ // bn
+
+    G, mvec = pl.pallas_call(
+        _kernel_fleet,
+        grid=(P, c, gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((1, bn, bm), lambda p, cls, i, j, k: (p, k, i)),
+            pl.BlockSpec((1, bn, bm), lambda p, cls, i, j, k: (p, k, j)),
+            pl.BlockSpec((1, bn, 1), lambda p, cls, i, j, k: (p, k, cls)),
+            pl.BlockSpec((1, bn, 1), lambda p, cls, i, j, k: (p, k, cls)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bm, bm),
+                         lambda p, cls, i, j, k: (p, cls, i, j)),
+            pl.BlockSpec((1, bm, 1), lambda p, cls, i, j, k: (p, i, cls)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, c, mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((P, mp, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Xs, Xs, Fps, Dbars)
+    return G[:, :, :m, :m], mvec[:, :m, :]
+
+
+def _kernel_fleet_shared(x_i_ref, x_j_ref, fp_ref, dbar_ref, g_ref, m_ref):
+    nk = pl.program_id(3)
+    j = pl.program_id(2)
+
+    @pl.when(nk == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when((nk == 0) & (j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    fp = fp_ref[0].astype(jnp.float32)            # (bn, 1): client p's mask
+    xi = x_i_ref[0].astype(jnp.float32)           # (bn, bm)
+    xj = x_j_ref[0].astype(jnp.float32)
+    xfi = xi * fp
+    xfj = xj * fp
+    g_ref[0] += jax.lax.dot_general(
+        xfi, xfj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _moment():
+        w = fp * fp * dbar_ref[0].astype(jnp.float32)     # (bn, c)
+        m_ref[0] += jax.lax.dot_general(
+            xi, w, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def gram_stats_fleet_shared(Xs, Fps, Dbars, *, bm: int = 128, bn: int = 512,
+                            interpret: bool = False):
+    """Fleet-batched shared-F statistics: Xs (P, n_max, m), Fps (P, n_max, 1)
+    shared diag (1 on real rows, 0 on pads), Dbars (P, n_max, c) →
+    ``(G (P, m, m), mvec (P, m, c))`` float32.
+
+    The fleet analogue of :func:`gram_stats_shared`: grid =
+    (p, mi, mj, nk), one k = 1 Gram and a c-column moment per client in a
+    single pallas_call.
+    """
+    P, n, m = Xs.shape
+    c = Dbars.shape[2]
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    if (mp, np_) != (m, n):
+        Xs = jnp.pad(Xs, ((0, 0), (0, np_ - n), (0, mp - m)))
+        Fps = jnp.pad(Fps, ((0, 0), (0, np_ - n), (0, 0)))
+        Dbars = jnp.pad(Dbars, ((0, 0), (0, np_ - n), (0, 0)))
+    gi, gj, gk = mp // bm, mp // bm, np_ // bn
+
+    G, mvec = pl.pallas_call(
+        _kernel_fleet_shared,
+        grid=(P, gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((1, bn, bm), lambda p, i, j, k: (p, k, i)),
+            pl.BlockSpec((1, bn, bm), lambda p, i, j, k: (p, k, j)),
+            pl.BlockSpec((1, bn, 1), lambda p, i, j, k: (p, k, 0)),
+            pl.BlockSpec((1, bn, c), lambda p, i, j, k: (p, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bm), lambda p, i, j, k: (p, i, j)),
+            pl.BlockSpec((1, bm, c), lambda p, i, j, k: (p, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((P, mp, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Xs, Xs, Fps, Dbars)
+    return G[:, :m, :m], mvec[:, :m, :]

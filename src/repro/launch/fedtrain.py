@@ -44,6 +44,13 @@ def main():
                          'straggler_delay=0.5" (see core/scenario.py)')
     ap.add_argument("--chunks", type=int, default=4,
                     help="chunks per client on the stream transport")
+    ap.add_argument("--batch-clients", action="store_true",
+                    help="fleet-batched client phase: one dispatch per "
+                         "power-of-two shape bucket (local transport)")
+    ap.add_argument("--fused", action="store_true",
+                    help="fuse client stats + merge (+ solve) into one "
+                         "jitted program per bucket (implies "
+                         "--batch-clients)")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -62,7 +69,9 @@ def main():
     engine = FederationEngine(wire=args.wire, transport=args.transport,
                               scenario=scenario, act="logistic",
                               lam=args.lam, backend=args.backend,
-                              chunks=args.chunks, warmup=True)
+                              chunks=args.chunks, warmup=True,
+                              batch_clients=args.batch_clients,
+                              fused=args.fused)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
@@ -82,7 +91,8 @@ def main():
           f"metered process CPU {report.cpu_seconds:.3f}s "
           f"({report.wh * 1000:.3f} mWh @65W)")
     print(f"[fedtrain] wire bytes uploaded ({args.wire}): "
-          f"{report.wire_bytes / 1024:.1f} KiB")
+          f"{report.wire_bytes / 1024:.1f} KiB | client-phase dispatches: "
+          f"{report.dispatches}")
 
 
 if __name__ == "__main__":

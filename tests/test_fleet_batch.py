@@ -1,0 +1,280 @@
+"""Fleet-batched client phase (ISSUE 3 acceptance).
+
+* batched (``batch_clients=True``) engine rounds bit-match the per-client
+  loop on the gram wire — same ``W``, same ``wire_bytes`` — across ragged
+  shard sizes, under dropout/late-join scenarios, and with empty shards,
+* the svd wire's batched round agrees to SVD rounding with identical
+  upload accounting,
+* the fleet client phase runs in one dispatch per shape bucket
+  (``RoundReport.dispatches``),
+* the fused round path (stats → leading-axis merge → solve in one
+  program) agrees to rounding and collapses a uniform round to ONE
+  dispatch,
+* solver-level: ``client_gram_stats_fleet`` is bitwise the per-client
+  pass on both backends; Cholesky and LU coordinator solves agree,
+* the stream transport's scan-folded chunk pass keeps the per-chunk
+  merge semantics.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (client_gram_stats, client_gram_stats_fleet,
+                        solve_weights_gram)
+from repro.core import activations as acts
+from repro.core.engine import FederationEngine, _bucket_bound
+from repro.core.scenario import Scenario
+from repro.core.wire import GramWire, get_wire
+from repro.data import partition, synthetic
+
+
+def _ragged_parts(P=8, n=1200, m=11, seed=0, alpha=0.3):
+    """Dirichlet split: every client a different shard size."""
+    spec = synthetic.DatasetSpec("toy", n, m, 2)
+    X, y = synthetic.generate(spec, seed=seed)
+    parts = partition.dirichlet(X, y, P, alpha=alpha, seed=seed)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    return pX, pD
+
+
+# --------------------------------------------------- engine bit parity
+def test_batched_bitmatches_loop_gram_ragged():
+    """Acceptance: fleet W bit-matches the loop on the gram wire."""
+    pX, pD = _ragged_parts()
+    assert len({p.shape[0] for p in pX}) > 2      # genuinely ragged
+    r_loop = FederationEngine(wire="gram").run(pX, pD)
+    r_bat = FederationEngine(wire="gram", batch_clients=True).run(pX, pD)
+    assert np.array_equal(np.asarray(r_loop.W), np.asarray(r_bat.W))
+    assert r_loop.wire_bytes == r_bat.wire_bytes
+    assert r_bat.dispatches < r_loop.dispatches == len(pX)
+    assert r_loop.n_samples == r_bat.n_samples
+    assert len(r_bat.client_times) == len(pX)
+
+
+def test_batched_bitmatches_loop_gram_pallas_backend():
+    pX, pD = _ragged_parts(P=4, n=400, m=9)
+    r_loop = FederationEngine(wire="gram", backend="pallas").run(pX, pD)
+    r_bat = FederationEngine(wire="gram", backend="pallas",
+                             batch_clients=True).run(pX, pD)
+    assert np.array_equal(np.asarray(r_loop.W), np.asarray(r_bat.W))
+
+
+def test_batched_matches_loop_svd():
+    """SVD factors only match up to rounding — W allclose, bytes equal."""
+    pX, pD = _ragged_parts()
+    r_loop = FederationEngine(wire="svd").run(pX, pD)
+    r_bat = FederationEngine(wire="svd", batch_clients=True).run(pX, pD)
+    np.testing.assert_allclose(np.asarray(r_loop.W), np.asarray(r_bat.W),
+                               rtol=1e-3, atol=1e-4)
+    assert r_loop.wire_bytes == r_bat.wire_bytes
+    assert r_bat.dispatches < r_loop.dispatches
+
+
+@pytest.mark.parametrize("wire_name", ["gram", "svd"])
+def test_batched_scenario_matches_union_solve(wire_name):
+    """Dropout + late-join under the batched path == direct union fold."""
+    P = 10
+    pX, pD = _ragged_parts(P=P)
+    sc = Scenario(dropout=0.3, late_join=0.2, seed=4)
+    engine = FederationEngine(wire=wire_name, scenario=sc, tree=False,
+                              batch_clients=True)
+    r = engine.run(pX, pD)
+    roles = sc.roles(P)
+    assert r.roles == roles and roles.late
+    w = get_wire(wire_name)
+    stats = [w.local_stats(pX[i], pD[i]) for i in roles.participants]
+    agg = stats[0]
+    for st in stats[1:]:
+        agg = w.merge(agg, st)
+    W_ref = w.solve(agg, 1e-3)
+    tol = dict(rtol=0, atol=0) if wire_name == "gram" else \
+        dict(rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r.W), np.asarray(W_ref), **tol)
+    assert r.W_first is not None
+    assert not np.array_equal(np.asarray(r.W), np.asarray(r.W_first))
+
+
+def test_batched_scenario_bitmatches_loop_gram():
+    """Same scenario, loop vs batched: W and W_first bit-identical."""
+    pX, pD = _ragged_parts(P=10)
+    sc = Scenario(dropout=0.3, late_join=0.2, seed=4)
+    r_loop = FederationEngine(wire="gram", scenario=sc).run(pX, pD)
+    r_bat = FederationEngine(wire="gram", scenario=sc,
+                             batch_clients=True).run(pX, pD)
+    assert np.array_equal(np.asarray(r_loop.W), np.asarray(r_bat.W))
+    assert np.array_equal(np.asarray(r_loop.W_first),
+                          np.asarray(r_bat.W_first))
+    assert r_loop.wire_bytes == r_bat.wire_bytes
+
+
+def test_batched_empty_shards():
+    """Over-partitioned data: empty shards ride the per-client fallback."""
+    pX, pD = _ragged_parts(P=4, n=300, m=7)
+    pX.append(np.zeros((0, 7), np.float32))
+    pD.append(np.zeros((0, 2), np.float32))
+    r_loop = FederationEngine(wire="gram").run(pX, pD)
+    r_bat = FederationEngine(wire="gram", batch_clients=True).run(pX, pD)
+    assert np.array_equal(np.asarray(r_loop.W), np.asarray(r_bat.W))
+    assert r_loop.wire_bytes == r_bat.wire_bytes
+
+
+def test_batched_dispatch_count_uniform_round():
+    """Equal shards → one bucket → ONE client-phase dispatch (the ≤ P/5
+    acceptance bound with two orders of magnitude to spare at P = 100)."""
+    spec = synthetic.DatasetSpec("toy", 1000, 8, 2)
+    X, y = synthetic.generate(spec, seed=1)
+    parts = partition.iid(X, y, 20, seed=1)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    r = FederationEngine(wire="gram", batch_clients=True).run(pX, pD)
+    assert r.dispatches == 1
+    r_loop = FederationEngine(wire="gram").run(pX, pD)
+    assert r_loop.dispatches == 20
+    assert np.array_equal(np.asarray(r.W), np.asarray(r_loop.W))
+
+
+def test_bucket_bound_policy():
+    assert [_bucket_bound(n) for n in (0, 1, 2, 3, 64, 65, 1000)] == \
+        [0, 1, 2, 4, 64, 128, 1024]
+
+
+# ------------------------------------------------------------ fused
+@pytest.mark.parametrize("wire_name", ["gram", "svd"])
+def test_fused_matches_loop(wire_name):
+    pX, pD = _ragged_parts()
+    r_loop = FederationEngine(wire=wire_name).run(pX, pD)
+    r_fused = FederationEngine(wire=wire_name, fused=True).run(pX, pD)
+    np.testing.assert_allclose(np.asarray(r_fused.W),
+                               np.asarray(r_loop.W),
+                               rtol=1e-3, atol=1e-4)
+    assert r_fused.dispatches < r_loop.dispatches
+    assert r_fused.wire_bytes == r_loop.wire_bytes
+
+
+def test_fused_uniform_round_is_one_dispatch():
+    """One bucket, no late joiners: stats → merge → solve is ONE program."""
+    spec = synthetic.DatasetSpec("toy", 960, 10, 2)
+    X, y = synthetic.generate(spec, seed=2)
+    parts = partition.iid(X, y, 12, seed=2)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    r = FederationEngine(wire="gram", fused=True, warmup=True).run(pX, pD)
+    assert r.dispatches == 1
+    r_loop = FederationEngine(wire="gram").run(pX, pD)
+    np.testing.assert_allclose(np.asarray(r.W), np.asarray(r_loop.W),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_scenario_late_join():
+    pX, pD = _ragged_parts(P=10)
+    sc = Scenario(dropout=0.2, late_join=0.2, seed=5)
+    r_loop = FederationEngine(wire="gram", scenario=sc).run(pX, pD)
+    r_fused = FederationEngine(wire="gram", scenario=sc,
+                               fused=True).run(pX, pD)
+    np.testing.assert_allclose(np.asarray(r_fused.W),
+                               np.asarray(r_loop.W),
+                               rtol=1e-4, atol=1e-5)
+    assert r_fused.W_first is not None
+    np.testing.assert_allclose(np.asarray(r_fused.W_first),
+                               np.asarray(r_loop.W_first),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- solver level
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("act", ["logistic", "identity"])
+def test_client_gram_stats_fleet_bitmatches_per_client(backend, act):
+    rng = np.random.default_rng(7)
+    m, c = 13, 3
+    ns = [190, 65, 512]
+    npad = 512
+    mid = float(acts.get(act).f(jnp.zeros(())))
+    Xs = np.zeros((len(ns), npad, m), np.float32)
+    Ds = np.full((len(ns), npad, c), mid, np.float32)
+    singles = []
+    for i, n in enumerate(ns):
+        X = rng.normal(size=(n, m)).astype(np.float32)
+        if act == "logistic":
+            D = np.asarray(acts.encode_labels(
+                rng.integers(0, c, size=n), c))
+        else:
+            D = rng.uniform(-0.8, 0.8, size=(n, c)).astype(np.float32)
+        singles.append(client_gram_stats(X, D, act=act, backend=backend))
+        Xs[i, :n], Ds[i, :n] = X, D
+    st = client_gram_stats_fleet(Xs, Ds, jnp.asarray(ns), act=act,
+                                 backend=backend)
+    k = 1 if act == "identity" else c
+    assert st.G.shape == (len(ns), k, m + 1, m + 1)
+    assert st.m_vec.shape == (len(ns), m + 1, c)
+    for i, n in enumerate(ns):
+        assert np.array_equal(np.asarray(st.G[i]),
+                              np.asarray(singles[i].G)), (backend, act, i)
+        assert np.array_equal(np.asarray(st.m_vec[i]),
+                              np.asarray(singles[i].m_vec))
+        assert float(st.n[i]) == n
+
+
+# ------------------------------------------------- coordinator solve
+def test_cholesky_matches_lu_solve():
+    """G+λI is SPD: the Cholesky default == the linalg.solve fallback."""
+    rng = np.random.default_rng(8)
+    X = rng.normal(size=(500, 10)).astype(np.float32)
+    D = np.asarray(acts.encode_labels(rng.integers(0, 3, size=500), 3))
+    st = client_gram_stats(X, D)
+    W_cho = solve_weights_gram(st, 1e-3)
+    W_lu = solve_weights_gram(st, 1e-3, method="solve")
+    np.testing.assert_allclose(np.asarray(W_cho), np.asarray(W_lu),
+                               rtol=1e-4, atol=1e-5)
+    with pytest.raises(ValueError):
+        solve_weights_gram(st, 1e-3, method="qr")
+    # the wire-level flag reaches the solver
+    w_lu = GramWire(solve_method="solve")
+    np.testing.assert_allclose(np.asarray(w_lu.solve(st, 1e-3)),
+                               np.asarray(W_lu), rtol=0, atol=0)
+
+
+def test_cholesky_identity_single_gram():
+    rng = np.random.default_rng(9)
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    D = rng.uniform(-0.8, 0.8, size=(300, 2)).astype(np.float32)
+    st = client_gram_stats(X, D, act="identity")
+    W_cho = solve_weights_gram(st, 1e-2)
+    W_lu = solve_weights_gram(st, 1e-2, method="solve")
+    np.testing.assert_allclose(np.asarray(W_cho), np.asarray(W_lu),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- stream scan fold
+def test_stream_chunked_scan_keeps_merge_semantics():
+    """GramWire.local_stats_chunked == the explicit per-chunk merge."""
+    rng = np.random.default_rng(10)
+    X = rng.normal(size=(413, 9)).astype(np.float32)
+    D = np.asarray(acts.encode_labels(rng.integers(0, 2, size=413), 2))
+    w = GramWire()
+    st_scan = w.local_stats_chunked(X, D, 4)
+    # reference: explicit chunk-by-chunk additive fold at the scan's
+    # chunk length
+    block = -(-413 // 4)
+    agg = None
+    for lo in range(0, 413, block):
+        st = w.local_stats(X[lo:lo + block], D[lo:lo + block])
+        agg = st if agg is None else w.merge(agg, st)
+    np.testing.assert_allclose(np.asarray(st_scan.G), np.asarray(agg.G),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_scan.m_vec),
+                               np.asarray(agg.m_vec),
+                               rtol=1e-5, atol=1e-5)
+    assert float(st_scan.n) == 413
+
+
+def test_stream_transport_uses_scan_and_matches_local():
+    pX, pD = _ragged_parts(P=5, n=600, m=8)
+    r_local = FederationEngine(wire="gram").run(pX, pD)
+    r_stream = FederationEngine(wire="gram", transport="stream",
+                                chunks=3).run(pX, pD)
+    np.testing.assert_allclose(np.asarray(r_stream.W),
+                               np.asarray(r_local.W),
+                               rtol=1e-5, atol=1e-5)
+    # one scan program per client, not one dispatch per chunk
+    assert r_stream.dispatches == len(pX)

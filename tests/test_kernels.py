@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import gram_stats, gram_stats_multi, decode_gqa
+from repro.kernels import (decode_gqa, gram_stats, gram_stats_fleet,
+                           gram_stats_fleet_shared, gram_stats_multi,
+                           gram_stats_shared)
 from repro.kernels import ops, ref
 
 
@@ -128,6 +130,91 @@ def test_gram_stats_feeds_paper_solver():
     W_ref = centralized_solve_gram(X, D[:, 0], act="logistic", lam=lam)
     np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref[:, 0]),
                                rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------ shared-F moment
+@pytest.mark.parametrize("n,m,c", [(64, 8, 2), (300, 50, 3), (257, 130, 4)])
+def test_gram_stats_shared_matches_ref(n, m, c):
+    """One pass emits the k=1 Gram AND every moment column (solver TODO:
+    the identity path used to discard the kernel moment and re-read X)."""
+    rng = np.random.default_rng(hash((n, m, c)) % 2**31)
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n,)), jnp.float32)
+    Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    G, mv = gram_stats_shared(X, fp, Db, interpret=True)
+    assert G.shape == (m, m) and mv.shape == (m, c)
+    G_ref, _ = ref.gram_stats_ref(X, fp, Db[:, 0])
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref),
+                               rtol=1e-5, atol=1e-4)
+    mv_ref = np.asarray(X).T @ (np.asarray(fp)[:, None] ** 2
+                                * np.asarray(Db))
+    np.testing.assert_allclose(np.asarray(mv), mv_ref,
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gram_stats_shared_ops_wrapper_identity():
+    """ops.client_gram_stats_shared defaults fp to ones (identity act)."""
+    rng = np.random.default_rng(11)
+    n, m, c = 200, 9, 3
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    G, mv = ops.client_gram_stats_shared(X, Db, interpret=True)
+    assert G.shape == (1, m, m) and mv.shape == (m, c)
+    np.testing.assert_allclose(np.asarray(G[0]),
+                               np.asarray(X).T @ np.asarray(X),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mv),
+                               np.asarray(X).T @ np.asarray(Db),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------- fleet kernels
+def test_gram_stats_fleet_bitmatches_per_client():
+    """The (p, c, mi, mj, nk) fleet grid replays the per-client kernel's
+    tile schedule exactly: every client slice is bitwise identical."""
+    rng = np.random.default_rng(12)
+    m, c = 20, 3
+    ns = [300, 137, 77]
+    npad = 512
+    Xs = np.zeros((len(ns), npad, m), np.float32)
+    Fps = np.zeros((len(ns), npad, c), np.float32)
+    Dbs = np.zeros((len(ns), npad, c), np.float32)
+    singles = []
+    for i, n in enumerate(ns):
+        X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        Fp = jnp.asarray(rng.uniform(0.05, 0.25, size=(n, c)), jnp.float32)
+        Db = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+        singles.append(gram_stats_multi(X, Fp, Db, interpret=True))
+        Xs[i, :n], Fps[i, :n], Dbs[i, :n] = X, Fp, Db
+    G, mv = gram_stats_fleet(jnp.asarray(Xs), jnp.asarray(Fps),
+                             jnp.asarray(Dbs), interpret=True)
+    assert G.shape == (len(ns), c, m, m) and mv.shape == (len(ns), m, c)
+    for i in range(len(ns)):
+        Gi, mvi = singles[i]
+        assert np.array_equal(np.asarray(G[i]), np.asarray(Gi))
+        assert np.array_equal(np.asarray(mv[i]), np.asarray(mvi))
+
+
+def test_gram_stats_fleet_shared_bitmatches_per_client():
+    rng = np.random.default_rng(13)
+    m, c = 14, 2
+    ns = [200, 450]
+    Xs = np.zeros((2, 512, m), np.float32)
+    Fp = np.zeros((2, 512, 1), np.float32)
+    Db = np.zeros((2, 512, c), np.float32)
+    singles = []
+    for i, n in enumerate(ns):
+        X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        D = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+        singles.append(gram_stats_shared(X, jnp.ones((n,), jnp.float32),
+                                         D, interpret=True))
+        Xs[i, :n], Fp[i, :n, 0], Db[i, :n] = X, 1.0, D
+    G, mv = gram_stats_fleet_shared(jnp.asarray(Xs), jnp.asarray(Fp),
+                                    jnp.asarray(Db), interpret=True)
+    for i in range(2):
+        Gi, mvi = singles[i]
+        assert np.array_equal(np.asarray(G[i]), np.asarray(Gi))
+        assert np.array_equal(np.asarray(mv[i]), np.asarray(mvi))
 
 
 # ----------------------------------------------------------- decode attn
