@@ -104,6 +104,9 @@ def run(scale=None, dataset: str = "susy", quick: bool = False,
         "rows": rows,
     }
     path = json_path or JSON_DEFAULT
+    # a fedround run resets the file; benchmarks/ledger_bench.py merges
+    # its "ledger" section in afterwards (ci_smoke.sh runs them in that
+    # order, so a stale ledger section can never satisfy its asserts)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"[bench] wrote {path} ({len(rows)} rows)")

@@ -1,0 +1,120 @@
+"""Ledger delta rounds vs full re-aggregation (EXPERIMENTS.md §Delta).
+
+The green-FL claim behind ISSUE 4: with a persisted
+``FederationLedger``, a membership change (one client revising or
+leaving) is an O(c·m²) signed merge plus at most one client's local
+pass — not a whole-federation recomputation. This bench prices one
+changed client at ``P`` clients on the gram wire, both ways:
+
+* ``delta`` — ``run_events`` against the persisted ledger (only the
+  changed client recomputes; a leave recomputes nobody),
+* ``full``  — the same tick with ``delta=False``: every active client
+  recomputes and re-uploads, the coordinator re-folds from scratch.
+
+Both modes share the exact signed-merge algebra, so their ``W`` is
+bit-identical (tested in tests/test_ledger.py) — the bench measures
+pure cost: wall, Σ CPU, Wh, wire bytes, dispatches per tick. Results
+merge into ``BENCH_fedround.json`` under the ``"ledger"`` key
+(preserving the fedround rows); the acceptance bar is
+``delta Σ CPU ≤ 25 %`` of full re-aggregation for the revise tick at
+P=100 — ``scripts/ci_smoke.sh`` asserts it from the JSON.
+
+``PYTHONPATH=src python -m benchmarks.ledger_bench [--quick] [--json PATH]``
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import activations as acts
+from repro.core.engine import FederationEngine
+from repro.core.ledger import FederationLedger
+from repro.core.scenario import Timeline
+from repro.data import partition, synthetic
+
+from .fedround_bench import JSON_DEFAULT
+
+P_MAIN = 100
+P_QUICK = 20
+SAMPLES_PER_CLIENT = 512        # ≥ one solver block: client compute real
+EVENTS = ["revise", "leave"]
+
+
+def _parts(P: int, seed: int = 0):
+    spec = synthetic.DatasetSpec("susy", P * SAMPLES_PER_CLIENT, 18, 2)
+    X, y = synthetic.generate(spec, seed=seed)
+    parts = partition.iid(X, y, P, seed=seed)
+    return ([p[0] for p in parts],
+            [np.asarray(acts.encode_labels(p[1], 2)) for p in parts])
+
+
+def _tick_row(engine, pX, pD, timeline, delta: bool):
+    """Join-all round first, then the timed churn tick on the same
+    persisted ledger — the wall clock covers only the churn tick."""
+    ledger = FederationLedger(engine.wire, lam=engine.lam)
+    engine.run_events(pX, pD, "none", ledger=ledger, delta=delta)
+    t0 = time.perf_counter()
+    reports = engine.run_events(pX, pD, timeline, ledger=ledger,
+                                delta=delta)
+    wall = time.perf_counter() - t0
+    return reports[-1], wall
+
+
+def run(quick: bool = False, json_path: str | None = None,
+        seed: int = 0):
+    P = P_QUICK if quick else P_MAIN
+    pX, pD = _parts(P, seed)
+    engine = FederationEngine(wire="gram", batch_clients=True,
+                              warmup=True)
+    rows, fracs = [], {}
+    for event in EVENTS:
+        timeline = Timeline.parse(f"events={event}@t1:p0")
+        by_mode = {}
+        for mode, delta in (("delta", True), ("full", False)):
+            rep, wall = _tick_row(engine, pX, pD, timeline, delta)
+            by_mode[mode] = rep
+            rows.append({
+                "bench": "ledger", "wire": "gram", "P": P,
+                "event": event, "mode": mode, "changed": 0 if
+                event == "leave" else 1,
+                "wall_s": round(wall, 6),
+                "train_time": round(rep.train_time, 6),
+                "cpu_time": round(rep.cpu_time, 6),
+                "wh": rep.wh,
+                "wire_bytes": rep.wire_bytes,
+                "dispatches": rep.dispatches,
+            })
+            print(f"[ledger] P={P} {event}/{mode}: tick ΣCPU "
+                  f"{rep.cpu_time:.4f}s, {rep.wire_bytes} B up, "
+                  f"{rep.dispatches} dispatches")
+        full_cpu = by_mode["full"].cpu_time
+        fracs[event] = by_mode["delta"].cpu_time / full_cpu \
+            if full_cpu else 0.0
+        print(f"[ledger] {event}: delta ΣCPU = "
+              f"{100 * fracs[event]:.1f}% of full re-aggregation")
+    path = json_path or JSON_DEFAULT
+    payload = {"bench": "fedround", "rows": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            pass
+    payload["ledger"] = {"P": P, "rows": rows,
+                         "delta_cpu_frac": fracs}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[ledger] wrote {path} (ledger section, {len(rows)} rows)")
+    return rows, fracs
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(args.quick, args.json)

@@ -27,13 +27,13 @@ def main():
                     help="write BENCH_fedround.json at the repo root")
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "fig4", "table3", "scenario",
-                             "fedround", "kernel", "roofline"],
+                             "fedround", "ledger", "kernel", "roofline"],
                     help="run a single benchmark")
     args = ap.parse_args()
 
     from . import (fedround_bench, fig2_clients_iid, fig3_energy,
-                   fig4_noniid, kernel_bench, roofline_table,
-                   scenario_bench, table3_accuracy)
+                   fig4_noniid, kernel_bench, ledger_bench,
+                   roofline_table, scenario_bench, table3_accuracy)
     from . import common
     if args.quick:
         common.CLIENTS_GRID = [1, 10, 100]
@@ -60,6 +60,9 @@ def main():
     if want("fedround") and (args.json or args.only == "fedround"):
         print("== Fed-round trajectory: loop vs fleet dispatch ==")
         fedround_bench.run(args.scale, quick=args.quick)
+    if want("ledger") and (args.json or args.only == "ledger"):
+        print("== Ledger delta rounds vs full re-aggregation ==")
+        ledger_bench.run(quick=args.quick)
     if want("kernel"):
         print("== Kernel micro-bench ==")
         kernel_bench.run()

@@ -1,1 +1,1 @@
-from .ckpt import load_checkpoint, save_checkpoint
+from .ckpt import load_checkpoint, load_flat, save_checkpoint

@@ -37,6 +37,19 @@ def save_checkpoint(path: str, tree, step: int | None = None) -> str:
     return path
 
 
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    """Raw path-keyed arrays of a checkpoint, no template required.
+
+    For consumers whose tree structure is data-dependent (e.g. the
+    federation ledger's per-client registry, whose client set and
+    shard shapes are only known from the file itself); callers with a
+    static template should prefer :func:`load_checkpoint`, which
+    shape/dtype-checks every leaf.
+    """
+    with np.load(path, allow_pickle=False) as data:
+        return {k: data[k] for k in data.files}
+
+
 def load_checkpoint(path: str, template) -> Any:
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files if k != "__step__"}

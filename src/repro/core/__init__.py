@@ -1,10 +1,11 @@
 """Paper core: single-round analytic federated learning for one-layer NNs."""
-from . import activations, engine, federated, head, scenario, sharded, \
-    solver, wire
+from . import activations, engine, federated, head, ledger, scenario, \
+    sharded, solver, wire
 from .engine import FederationEngine, RoundReport
 from .federated import (FedONNClient, FedONNCoordinator,
                         FedONNGramCoordinator, fed_fit, fed_fit_timed)
-from .scenario import ClientRoles, Scenario
+from .ledger import ExactAccumulator, FederationLedger
+from .scenario import ClientRoles, Scenario, Timeline, TimelineEvent
 from .streaming import StreamingClient, StreamingGramClient
 from .solver import (ClientStats, GramStats, centralized_solve_gram,
                      client_gram_stats, client_gram_stats_fleet,
@@ -14,9 +15,10 @@ from .solver import (ClientStats, GramStats, centralized_solve_gram,
 from .wire import GramWire, SvdWire, Wire, get_wire
 
 __all__ = [
-    "activations", "engine", "federated", "head", "scenario", "sharded",
-    "solver", "wire",
+    "activations", "engine", "federated", "head", "ledger", "scenario",
+    "sharded", "solver", "wire",
     "FederationEngine", "RoundReport", "ClientRoles", "Scenario",
+    "Timeline", "TimelineEvent", "ExactAccumulator", "FederationLedger",
     "Wire", "SvdWire", "GramWire", "get_wire",
     "FedONNClient", "FedONNCoordinator", "FedONNGramCoordinator",
     "fed_fit", "fed_fit_timed",

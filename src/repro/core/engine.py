@@ -36,6 +36,12 @@ The local transport's client phase has three gears (DESIGN.md §8):
   merge reorders float additions, so parity with the loop is to rounding
   (not bitwise).
 
+Beyond the single round, :meth:`FederationEngine.run_events` drives a
+:class:`~.scenario.Timeline` of join/leave/revise events against a
+persisted :class:`~.ledger.FederationLedger` — one report per tick,
+with only the *changed* clients recomputing local statistics
+(DESIGN.md §9).
+
 Every run returns a :class:`RoundReport` with the paper's §4.1 metrics —
 train time (slowest client + coordinator), Σ CPU, Wh from process-CPU
 metering (``energy/meter.py``) — plus the per-wire upload bytes and the
@@ -54,7 +60,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import activations as acts
-from .scenario import ClientRoles, Scenario
+from .ledger import FederationLedger
+from .scenario import ClientRoles, Scenario, Timeline
 from .util import add_bias, as_2d
 from .wire import Wire, _WireBase, get_wire
 from ..energy import EnergyMeter, watt_hours
@@ -99,6 +106,10 @@ class RoundReport:
     rounds: int = 1
     dispatches: int = 0
     W_first: Optional[jnp.ndarray] = None
+    # event-driven (run_events) rounds: the ledger tick this report
+    # closes and the clients whose statistics were recomputed for it
+    tick: int = 0
+    changed: Sequence[int] = ()
 
     @property
     def client_clocks(self) -> List[float]:
@@ -192,6 +203,143 @@ class FederationEngine:
                         [acts.encode_labels(p[1], n_classes)
                          for p in parts])
 
+    # ------------------------------------------------- event-driven rounds
+    def run_events(self, parts_X: Sequence, parts_d: Sequence,
+                   timeline, *, ledger: Optional[FederationLedger] = None,
+                   delta: bool = True, revise_fn=None
+                   ) -> List[RoundReport]:
+        """Multi-round federation under a join/leave/revise event stream.
+
+        Each tick of ``timeline`` (a :class:`~.scenario.Timeline` or its
+        spec string) becomes one round: events apply to ``ledger`` as
+        signed merges, then the coordinator solves — one
+        :class:`RoundReport` per tick, ``report.tick``/``report.changed``
+        carrying the event bookkeeping. Only *changed* clients (joins
+        and revisions) recompute local statistics, fleet-batched through
+        the bucket path when ``batch_clients``; with ``delta=False``
+        every tick instead recomputes and re-folds ALL active clients
+        (the full re-aggregation baseline ``benchmarks/ledger_bench.py``
+        prices against — same coordinator algebra, so ``W`` bit-matches
+        the delta path on the gram wire).
+
+        The engine's scenario composes: dropped clients never auto-join,
+        late-joiners auto-join at tick 1 instead of 0 (explicitly
+        scheduled clients follow the timeline alone). ``revise`` events
+        re-publish a client's statistics over revised data —
+        ``revise_fn(X, d, tick)`` (default: drop the oldest quarter,
+        a deletion-request drill) updates the client's shard in place
+        for all later rounds. Pass a restored ``ledger`` to continue a
+        checkpointed federation: ticks ≤ ``ledger.tick`` are skipped —
+        the registry already carries those events' statistics (the
+        skipped ticks' ``revise_fn`` *data* mutations are not replayed,
+        so a continued run that revises the same client again drills
+        against the original shard).
+        """
+        if self.transport == "mesh":
+            raise ValueError("run_events needs an in-process transport "
+                             "(local|stream); mesh rounds are one-shot")
+        timeline = Timeline.parse(timeline) if isinstance(timeline, str) \
+            else timeline
+        P = len(parts_X)
+        if len(parts_d) != P:
+            raise ValueError("parts_X and parts_d length mismatch")
+        data = {i: (parts_X[i], as_2d(parts_d[i])) for i in range(P)}
+        if ledger is None:
+            ledger = FederationLedger(self.wire, lam=self.lam)
+        elif ledger.clients and max(ledger.clients) >= P:
+            # a restored federation must fit the current client pool —
+            # otherwise active clients would have no data to recompute
+            raise ValueError(
+                f"ledger has active clients up to id "
+                f"{max(ledger.clients)} but only {P} shards were given; "
+                "repartition with at least as many clients as the "
+                "checkpointed federation")
+        if revise_fn is None:
+            revise_fn = _default_revise
+        # `seen` (active ∪ departed) guards auto-admission: a continued
+        # run admits genuinely new clients at its first tick but never
+        # re-admits ones whose departure was an explicit event
+        sc_roles = self.scenario.roles(P)
+        schedule = timeline.schedule(P, roles=sc_roles,
+                                     joined=ledger.seen,
+                                     start=ledger.tick + 1)
+        reports = []
+        for t, events in schedule:
+            if t <= ledger.tick:
+                continue               # restored ledger: already applied
+            with EnergyMeter() as em:
+                rep = self._run_tick(data, t, events, ledger, delta,
+                                     revise_fn, sc_roles.delays)
+            rep.cpu_seconds = em.cpu_seconds
+            ledger.tick = t
+            reports.append(rep)
+        return reports
+
+    def _run_tick(self, data, t, events, ledger, delta, revise_fn,
+                  delays) -> RoundReport:
+        for ev in events:              # data revisions first: the round
+            if ev.kind == "revise":    # republishes over revised shards
+                X, d = data[ev.client]
+                data[ev.client] = revise_fn(X, d, t)
+        changed = sorted({ev.client for ev in events
+                          if ev.kind in ("join", "revise")})
+        if not delta:
+            # full re-aggregation baseline: every active client (the
+            # post-event membership) recomputes and re-uploads
+            active_after = set(ledger.clients)
+            for ev in events:
+                if ev.kind == "join":
+                    active_after.add(ev.client)
+                elif ev.kind == "leave":
+                    active_after.discard(ev.client)
+            recompute = sorted(active_after | set(changed))
+        else:
+            recompute = changed
+        pX = {i: data[i][0] for i in recompute}
+        pD = {i: data[i][1] for i in recompute}
+        stats, time_by, dispatches = self._phase_stats(pX, pD, recompute)
+        t0 = time.perf_counter()
+        if delta:
+            for ev in events:
+                if ev.kind == "join":
+                    ledger.join(ev.client, stats[ev.client])
+                elif ev.kind == "revise":
+                    ledger.revise(ev.client, stats[ev.client])
+                elif ev.kind == "leave":
+                    ledger.leave(ev.client)
+        else:
+            # same signed-merge algebra, but every statistic re-enters
+            # (the membership bookkeeping still goes through the
+            # persistent ledger so checkpoints stay valid)
+            for cid in recompute:
+                if cid in ledger.registry:
+                    ledger.revise(cid, stats[cid])
+                else:
+                    ledger.join(cid, stats[cid])
+            for ev in events:
+                if ev.kind == "leave":
+                    ledger.leave(ev.client)
+        # the engine's λ drives the solve (a restored ledger may carry
+        # an older default; its lam only backs standalone ledger.solve())
+        W = ledger.solve(self.lam)
+        coordinator_time = time.perf_counter() - t0
+        uploaded = recompute if not delta else changed
+        wire_bytes = sum(self.wire.wire_bytes(stats[i]) for i in uploaded)
+        active = ledger.clients
+        P = len(data)
+        # the scenario's simulated straggler delays gate this tick too:
+        # train_time = slowest participant clock, as on the round paths
+        roles = ClientRoles(on_time=active, late=(),
+                            dropped=tuple(sorted(set(range(P)) -
+                                                 set(active))),
+                            delays=tuple(delays))
+        return RoundReport(
+            W=W, client_times=[time_by.get(i, 0.0) for i in active],
+            coordinator_time=coordinator_time, wire_bytes=wire_bytes,
+            roles=roles,
+            n_samples=sum(int(data[i][0].shape[0]) for i in active),
+            dispatches=dispatches, tick=t, changed=tuple(changed))
+
     # ------------------------------------------------- in-process paths
     def _client_stats(self, X, d):
         if self.transport != "stream" or self.chunks == 1 \
@@ -240,29 +388,24 @@ class FederationEngine:
             if self.fused:
                 return self._run_fused(parts_X, parts_d, roles)
             return self._run_batched(parts_X, parts_d, roles)
+        stats, time_by, dispatches = self._phase_stats(
+            parts_X, parts_d, roles.participants)
         if self.warmup and roles.participants:
-            # compile pass at the first participant's real shapes so the
-            # timed loop below measures steady-state execution
+            # merge + solve compile pass (the client pass warmed inside
+            # _phase_stats) so the timed coordinator is steady-state
             i0 = roles.participants[0]
-            st = self._client_stats(parts_X[i0], parts_d[i0])
-            jax.block_until_ready(
-                self.wire.solve(self.wire.merge(st, st), self.lam))
-        stats, times, n_samples = {}, [], 0
-        for i in roles.participants:
-            t0 = time.perf_counter()
-            st = self._client_stats(parts_X[i], parts_d[i])
-            jax.block_until_ready(st)
-            times.append(time.perf_counter() - t0)
-            stats[i] = st
-            n_samples += int(parts_X[i].shape[0])
+            jax.block_until_ready(self.wire.solve(
+                self.wire.merge(stats[i0], stats[i0]), self.lam))
         wire_bytes = sum(self.wire.wire_bytes(stats[i])
                          for i in roles.participants)
         W, W_first, coordinator_time = self._coordinator(stats, roles)
-        return RoundReport(W=W, client_times=times,
-                           coordinator_time=coordinator_time,
-                           wire_bytes=wire_bytes, roles=roles,
-                           n_samples=n_samples, W_first=W_first,
-                           dispatches=len(roles.participants))
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=coordinator_time,
+            wire_bytes=wire_bytes, roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=dispatches)
 
     # -------------------------------------------- fleet-batched client phase
     def _buckets(self, parts_X, idxs):
@@ -309,13 +452,34 @@ class FederationEngine:
         for i, n in zip(idxs, ns):
             time_by[i] = dt * (int(n) / total if total else 1 / len(idxs))
 
-    def _run_batched(self, parts_X, parts_d, roles) -> RoundReport:
+    def _phase_stats(self, parts_X, parts_d, idxs):
+        """Client-phase statistics for ``idxs`` — one dispatch per shape
+        bucket when ``batch_clients`` (local transport only: streaming
+        clients keep their chunk-folding pass), else the per-client
+        loop. Returns ``(stats, time_by, dispatches)`` keyed by client
+        index.
+        """
         stats, time_by, dispatches = {}, {}, 0
-        for bound, idxs in self._buckets(parts_X, roles.participants):
+        if not (self.batch_clients and self.transport == "local"):
+            if self.warmup and idxs:
+                # untimed compile pass at the first client's shapes, as
+                # on the loop transport path, so client_times below
+                # measure steady-state execution
+                i0 = idxs[0]
+                jax.block_until_ready(
+                    self._client_stats(parts_X[i0], parts_d[i0]))
+            for i in idxs:
+                t0 = time.perf_counter()
+                stats[i] = self._client_stats(parts_X[i], parts_d[i])
+                jax.block_until_ready(stats[i])
+                time_by[i] = time.perf_counter() - t0
+                dispatches += 1
+            return stats, time_by, dispatches
+        for bound, b_idxs in self._buckets(parts_X, idxs):
             if bound == 0:
                 # empty shards: per-client call (their statistics are
                 # exactly zero but still count one upload, as on the loop)
-                for i in idxs:
+                for i in b_idxs:
                     t0 = time.perf_counter()
                     stats[i] = self.wire.local_stats(parts_X[i],
                                                      parts_d[i])
@@ -323,7 +487,8 @@ class FederationEngine:
                     time_by[i] = time.perf_counter() - t0
                     dispatches += 1
                 continue
-            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, idxs, bound)
+            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, b_idxs,
+                                            bound)
             if self.warmup:
                 # compile this bucket's stacked shape once, untimed
                 jax.block_until_ready(
@@ -336,10 +501,15 @@ class FederationEngine:
             # the dispatch metric honest for custom wires
             native = type(self.wire).local_stats_batch \
                 is not _WireBase.local_stats_batch
-            dispatches += 1 if native else len(idxs)
-            self._share_times(time_by, idxs, ns,
+            dispatches += 1 if native else len(b_idxs)
+            self._share_times(time_by, b_idxs, ns,
                               time.perf_counter() - t0)
-            stats.update(zip(idxs, batch))
+            stats.update(zip(b_idxs, batch))
+        return stats, time_by, dispatches
+
+    def _run_batched(self, parts_X, parts_d, roles) -> RoundReport:
+        stats, time_by, dispatches = self._phase_stats(
+            parts_X, parts_d, roles.participants)
         if self.warmup and roles.participants:
             i0 = roles.participants[0]
             jax.block_until_ready(self.wire.solve(
@@ -522,6 +692,17 @@ class FederationEngine:
                            coordinator_time=coordinator_time,
                            wire_bytes=wire_bytes, roles=roles,
                            n_samples=n, dispatches=1)
+
+
+def _default_revise(X, d, tick: int):
+    """Default revision drill: drop the client's oldest quarter.
+
+    Simulates a batched deletion request (the GDPR case the ledger's
+    exact downdate exists for); the surviving rows republish as the
+    client's new statistics.
+    """
+    cut = int(X.shape[0]) // 4
+    return X[cut:], d[cut:]
 
 
 def _bucket_bound(n: int) -> int:

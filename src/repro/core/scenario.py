@@ -22,12 +22,24 @@ arXiv:2303.14604):
 All role assignment is deterministic in ``seed``, so an engine run and an
 external reference solve can agree on the exact participant set.
 ``Scenario.parse("dropout=0.3,late_join=0.2")`` backs the launcher's
-``--scenario`` flag.
+``--scenario`` flag; malformed specs (unknown keys, unparseable or
+out-of-range values) raise ``ValueError`` naming the offending token.
+
+A :class:`Timeline` extends the single-round availability story to a
+*multi-round event stream* (the ledger's input, DESIGN.md §9): clients
+``join``, ``leave``, and ``revise`` at integer ticks, and every tick
+ends in a coordinator solve. ``Timeline.parse("events=join@t1:p5,
+leave@t3:p2,revise@t4:p7")`` backs the launcher's ``--timeline`` flag;
+clients the timeline never mentions are admitted at tick 0 (or, for a
+scenario's late-joiners, tick 1 — dropped clients never join), so a
+timeline composes with the same availability scenarios as a single
+round.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import re
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -92,7 +104,11 @@ class Scenario:
 
         ``None``, ``""`` and ``"none"`` give the default (everyone on
         time). Keys are the dataclass fields; ``-`` in a key reads as
-        ``_`` so shell-friendly ``late-join=0.2`` works too.
+        ``_`` so shell-friendly ``late-join=0.2`` works too. Every
+        malformed item — unknown key, unparseable value, out-of-range
+        value (fractions outside [0, 1], negative delay, non-positive
+        α), unknown partitioner — raises ``ValueError`` quoting the
+        offending token.
         """
         if not spec or spec.strip().lower() == "none":
             return cls()
@@ -106,6 +122,140 @@ class Scenario:
                     f"bad scenario item {item!r} (known keys: "
                     f"{sorted(fields)})")
             default = getattr(cls, key)
-            kw[key] = val.strip() if isinstance(default, str) else \
-                type(default)(val)
+            try:
+                kw[key] = val.strip() if isinstance(default, str) else \
+                    type(default)(val)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"bad scenario value in {item!r} (expected "
+                    f"{type(default).__name__})") from None
+            if key in ("dropout", "late_join", "straggler_frac") and \
+                    not 0.0 <= kw[key] <= 1.0:
+                raise ValueError(f"bad scenario item {item!r}: "
+                                 f"{key} must be in [0, 1]")
+            if key == "straggler_delay" and kw[key] < 0.0:
+                raise ValueError(f"bad scenario item {item!r}: "
+                                 "straggler_delay must be >= 0")
+            if key == "alpha" and not kw[key] > 0.0:
+                raise ValueError(f"bad scenario item {item!r}: "
+                                 "alpha must be > 0")
+        if "partition" in kw:
+            from ..data.partition import PARTITIONERS
+            if kw["partition"] not in PARTITIONERS:
+                raise ValueError(
+                    f"bad scenario item 'partition={kw['partition']}' "
+                    f"(known partitioners: {sorted(PARTITIONERS)})")
         return cls(**kw)
+
+
+# --------------------------------------------------------- timelines
+_EVENT_RE = re.compile(
+    r"^(?P<kind>join|leave|revise)@t?(?P<t>\d+)"
+    r":p?(?P<lo>\d+)(?:-p?(?P<hi>\d+))?$")
+_TICK_RE = re.compile(r"^tick@t?(?P<t>\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    """One ledger event: ``kind`` ∈ join|leave|revise|tick at tick ``t``.
+
+    ``client`` is the target client index (``None`` for the bare
+    ``tick`` event, which forces a solve round with no membership
+    change).
+    """
+    t: int
+    kind: str
+    client: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """An ordered event stream over integer ticks (the ledger's input).
+
+    Build programmatically or via :meth:`parse`. Each distinct tick in
+    the (scenario-augmented) schedule becomes one ledger round: events
+    apply in order, then the coordinator solves.
+    """
+    events: Tuple[TimelineEvent, ...] = ()
+
+    @classmethod
+    def parse(cls, spec: Optional[str]) -> "Timeline":
+        """``"events=join@t1:p5,leave@t3:p2,revise@t4:p7"`` → Timeline.
+
+        Grammar per comma-separated token (the leading ``events=`` is
+        optional on every token): ``kind@tN:pM`` with ``kind`` ∈
+        join|leave|revise, ``pM-pK`` an inclusive client range, and
+        ``tick@tN`` a bare solve round. ``None``/``""``/``"none"`` give
+        the empty timeline (everyone joins at tick 0). Malformed tokens
+        raise ``ValueError`` quoting the token.
+        """
+        if not spec or spec.strip().lower() == "none":
+            return cls()
+        events: List[TimelineEvent] = []
+        for raw in spec.split(","):
+            tok = raw.strip()
+            if tok.startswith("events="):
+                tok = tok[len("events="):].strip()
+            m = _TICK_RE.match(tok)
+            if m:
+                events.append(TimelineEvent(int(m.group("t")), "tick"))
+                continue
+            m = _EVENT_RE.match(tok)
+            if not m:
+                raise ValueError(
+                    f"bad timeline event {raw.strip()!r} (expected "
+                    "'join|leave|revise@tN:pM[-pK]' or 'tick@tN')")
+            lo = int(m.group("lo"))
+            hi = int(m.group("hi")) if m.group("hi") else lo
+            if hi < lo:
+                raise ValueError(f"bad timeline event {raw.strip()!r}: "
+                                 f"empty client range p{lo}-p{hi}")
+            events.extend(TimelineEvent(int(m.group("t")),
+                                        m.group("kind"), p)
+                          for p in range(lo, hi + 1))
+        return cls(events=tuple(events))
+
+    def schedule(self, P: int, roles: Optional[ClientRoles] = None,
+                 joined: Sequence[int] = (), start: int = 0
+                 ) -> List[Tuple[int, List[TimelineEvent]]]:
+        """Resolve to ``[(tick, [events])]``, sorted by tick.
+
+        Clients not already ``joined`` (e.g. from a restored ledger) are
+        auto-admitted: a scenario's on-time clients at tick ``start``,
+        its late-joiners one tick later, its dropped clients never —
+        unless the client's *first* timeline event is a ``join``, which
+        opts it out of automatic admission (a client first mentioned by
+        ``leave`` or ``revise`` still auto-joins, so ``leave@t1:p3``
+        alone means "p3 participates from tick 0, then leaves").
+        ``start`` is the first tick a continued run will execute
+        (``ledger.tick + 1``), so clients that were absent from the
+        checkpointed federation — a grown pool — are admitted on the
+        first new round rather than at the already-applied tick 0.
+        """
+        by_t = {}
+        for ev in self.events:
+            if ev.client is not None and not 0 <= ev.client < P:
+                raise ValueError(
+                    f"timeline event {ev.kind}@t{ev.t}:p{ev.client} "
+                    f"targets a client outside 0..{P - 1}")
+            by_t.setdefault(ev.t, []).append(ev)
+        self_admitted, seen = set(), set()
+        for ev in sorted(self.events, key=lambda e: e.t):  # time order
+            if ev.client is not None and ev.client not in seen:
+                seen.add(ev.client)
+                if ev.kind == "join":
+                    self_admitted.add(ev.client)
+        auto = [i for i in range(P)
+                if i not in self_admitted and i not in set(joined)]
+        late = set(roles.late) if roles is not None else set()
+        dropped = set(roles.dropped) if roles is not None else set()
+        start = max(0, int(start))
+        for tick, ids in ((start, [i for i in auto if i not in late
+                                   and i not in dropped]),
+                          (start + 1, [i for i in auto if i in late])):
+            if ids:
+                by_t[tick] = [TimelineEvent(tick, "join", i)
+                              for i in ids] + by_t.get(tick, [])
+        if not by_t:
+            by_t[start] = []    # an empty timeline is still one round
+        return sorted(by_t.items())

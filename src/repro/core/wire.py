@@ -280,6 +280,31 @@ class GramWire(_WireBase):
     def merge(self, a: GramStats, b: GramStats) -> GramStats:
         return solver.merge_gram(a, b)
 
+    def merge_signed(self, a: GramStats, b: GramStats,
+                     sign: int = 1) -> GramStats:
+        """Signed merge: ``a ± b`` elementwise on every statistic.
+
+        ``sign=-1`` is the *downdate* — removing client ``b`` from an
+        aggregate it was previously merged into (``G−G_b``,
+        ``m_vec−M_b``, ``n−n_b``). The downdate is mathematically exact
+        (the statistics are linear in the data), but in floating point
+        ``(a+b)−b`` recovers ``a`` only when no accumulation step
+        rounded; :class:`~.ledger.ExactAccumulator` is the ledger's
+        unconditional-bit-exactness upgrade of this operation.
+        """
+        s = jnp.asarray(sign, a.G.dtype)
+        return GramStats(G=a.G + s * b.G, m_vec=a.m_vec + s * b.m_vec,
+                         n=a.n + s * b.n)
+
+    def subtract(self, a: GramStats, b: GramStats) -> GramStats:
+        """Exact-form downdate ``a − b`` (see :meth:`merge_signed`).
+
+        Presence of this method is the trait the
+        :class:`~.ledger.FederationLedger` keys on to run O(c·m²)
+        delta rounds instead of re-merging the surviving registry.
+        """
+        return self.merge_signed(a, b, -1)
+
     def solve(self, stats: GramStats, lam: float = 1e-3) -> jnp.ndarray:
         return solver.solve_weights_gram(stats, lam,
                                          method=self.solve_method)

@@ -9,17 +9,26 @@ and Wh (process-CPU metered) — plus the wire's upload bytes.
 ``PYTHONPATH=src python -m repro.launch.fedtrain --dataset higgs
 --clients 1000 --partition pathological --wire gram --transport stream
 --scenario "dropout=0.3,late_join=0.2"``
+
+``--timeline "events=leave@t2:p3,revise@t3:p0"`` switches to the
+event-driven multi-round path (``FederationEngine.run_events`` over a
+``FederationLedger``): one solve per tick, only changed clients
+recompute. ``--ledger-ckpt PATH`` persists the ledger after the run —
+and, when the file already exists, restores it first and continues the
+timeline from the saved tick with bit-identical state.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import numpy as np
 
 from repro.core import predict_labels
 from repro.core.engine import FederationEngine, TRANSPORTS
-from repro.core.scenario import Scenario
+from repro.core.ledger import FederationLedger
+from repro.core.scenario import Scenario, Timeline
 from repro.data import partition, synthetic
 
 
@@ -51,6 +60,17 @@ def main():
                     help="fuse client stats + merge (+ solve) into one "
                          "jitted program per bucket (implies "
                          "--batch-clients)")
+    ap.add_argument("--timeline", default=None,
+                    help='ledger event stream, e.g. "events=join@t1:p5,'
+                         'leave@t3:p2,revise@t4:p7" — runs one round '
+                         'per tick (see core/scenario.Timeline)')
+    ap.add_argument("--ledger-ckpt", default=None,
+                    help="ledger checkpoint path: restored (and "
+                         "continued) if it exists, saved after the run")
+    ap.add_argument("--full-reagg", action="store_true",
+                    help="timeline runs re-aggregate every active "
+                         "client each tick (the baseline delta rounds "
+                         "are priced against)")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -77,6 +97,10 @@ def main():
           f"({scenario.partition}), wire={args.wire} "
           f"transport={args.transport}")
 
+    if args.timeline is not None:
+        run_timeline(args, engine, Xtr, ytr, Xte, yte, P)
+        return
+
     report = engine.run_dataset(Xtr, ytr, P, n_classes=2)
     roles = report.roles
     pred = predict_labels(report.W, Xte, act="logistic")
@@ -93,6 +117,53 @@ def main():
     print(f"[fedtrain] wire bytes uploaded ({args.wire}): "
           f"{report.wire_bytes / 1024:.1f} KiB | client-phase dispatches: "
           f"{report.dispatches}")
+
+
+def run_timeline(args, engine, Xtr, ytr, Xte, yte, P):
+    """Event-driven rounds: ledger restore → run_events → save."""
+    from repro.core import activations as acts
+    timeline = Timeline.parse(args.timeline)
+    ledger = None
+    if args.ledger_ckpt and os.path.exists(args.ledger_ckpt):
+        ledger = FederationLedger.restore(args.ledger_ckpt,
+                                          backend=args.backend or "xla")
+        if ledger.wire.name != args.wire:
+            raise SystemExit(
+                f"[fedtrain] ledger checkpoint {args.ledger_ckpt} was "
+                f"saved on the {ledger.wire.name!r} wire but --wire is "
+                f"{args.wire!r}; rerun with --wire {ledger.wire.name}")
+        if ledger.lam != args.lam:
+            print(f"[fedtrain] note: checkpoint was saved with lam="
+                  f"{ledger.lam:g}; continuing with --lam {args.lam:g}")
+        print(f"[fedtrain] restored ledger from {args.ledger_ckpt}: "
+              f"{len(ledger.clients)} clients, tick {ledger.tick}")
+    if ledger is None:
+        ledger = FederationLedger(engine.wire, lam=engine.lam)
+    parts = engine.scenario.make_parts(Xtr, ytr, P)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    reports = engine.run_events(pX, pD, timeline, ledger=ledger,
+                                delta=not args.full_reagg)
+    for r in reports:
+        pred = predict_labels(r.W, Xte, act="logistic")
+        acc = float((np.asarray(pred) == yte).mean())
+        print(f"[fedtrain] tick {r.tick}: {len(r.roles.on_time)} active, "
+              f"changed {list(r.changed) or '[]'} — acc {acc:.4f}, "
+              f"train {r.train_time:.3f}s, ΣCPU {r.cpu_time:.3f}s, "
+              f"{r.wire_bytes / 1024:.1f} KiB up, "
+              f"{r.dispatches} dispatches")
+    if not reports:
+        print("[fedtrain] timeline: no ticks beyond the restored state")
+    total_cpu = sum(r.cpu_time for r in reports)
+    total_wh = sum(r.wh for r in reports)
+    mode = "full re-agg" if args.full_reagg else "delta"
+    print(f"[fedtrain] {len(reports)} {mode} rounds — "
+          f"ΣCPU {total_cpu:.3f}s, {total_wh * 1000:.3f} mWh, "
+          f"Σ upload {sum(r.wire_bytes for r in reports) / 1024:.1f} KiB")
+    if args.ledger_ckpt:
+        ledger.save(args.ledger_ckpt)
+        print(f"[fedtrain] saved ledger → {args.ledger_ckpt} "
+              f"(tick {ledger.tick})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Marker wiring: everything not ``slow`` is tier-1.
+
+``pyproject.toml`` registers the two markers; CI's fast lane is
+``pytest -m tier1`` (scripts/ci_smoke.sh) while the full suite —
+ROADMAP.md's tier-1 verify command — still runs everything, slow
+subprocess mesh tests included.
+"""
+import pytest
+
+
+def pytest_collection_modifyitems(items):
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)

@@ -1,0 +1,394 @@
+"""FederationLedger + run_events coverage (ISSUE 4 acceptance).
+
+* exact unlearning: after ``leave@t:pK`` the ledger's W bit-matches a
+  from-scratch solve over the surviving clients' union — on both wires,
+  under dropout/late-join scenarios, and across a checkpoint
+  save/restore cycle,
+* delta rounds bit-match full re-aggregation (``delta=False``) on the
+  gram wire, and agree with the one-shot engine round to rounding,
+* revise downdates exactly (revise == the revised client never having
+  published its old data),
+* ledger state machine errors (double join, leave/revise of absent
+  clients, empty solve) and timeline parse errors name the offender,
+* Scenario.parse rejects malformed specs with the offending token,
+* checkpointed federations continue with bit-identical state through
+  ``checkpoint/ckpt.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import activations as acts
+from repro.core.engine import FederationEngine
+from repro.core.ledger import FederationLedger
+from repro.core.scenario import Scenario, Timeline, TimelineEvent
+from repro.core.wire import get_wire
+from repro.data import partition, synthetic
+
+
+def _parts(P=8, n=600, m=12, seed=0, alpha=None):
+    spec = synthetic.DatasetSpec("toy", n, m, 2)
+    X, y = synthetic.generate(spec, seed=seed)
+    parts = partition.dirichlet(X, y, P, alpha=alpha, seed=seed) \
+        if alpha else partition.iid(X, y, P, seed=seed)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    return pX, pD
+
+
+def _scratch_W(wire_name, pX, pD, survivors, lam=1e-3,
+               batch=False):
+    """From-scratch solve over the survivors' union, via a fresh ledger
+    (the same coordinator algebra a new federation would run).
+
+    ``batch=True`` publishes through the fleet-batched client pass —
+    what a fresh engine federation of the survivors runs. Required for
+    bitwise comparison on the svd wire, whose batched SVD factors equal
+    the per-client ones only to rounding (the gram slices are bitwise
+    either way, tests/test_fleet_batch.py)."""
+    if batch:
+        eng = FederationEngine(wire=wire_name, lam=lam,
+                               batch_clients=True)
+        reps = eng.run_events([pX[i] for i in survivors],
+                              [pD[i] for i in survivors], "none",
+                              ledger=FederationLedger(wire_name, lam=lam))
+        return np.asarray(reps[-1].W)
+    w = get_wire(wire_name)
+    led = FederationLedger(w, lam=lam)
+    for i in survivors:
+        led.join(i, w.local_stats(pX[i], pD[i]))
+    return np.asarray(led.solve())
+
+
+# ------------------------------------------------------ exact unlearning
+@pytest.mark.parametrize("wire_name", ["gram", "svd"])
+def test_leave_bitmatches_scratch_solve(wire_name):
+    """Acceptance: leave@t1:p3 → W bit-equals never-having-joined."""
+    pX, pD = _parts()
+    eng = FederationEngine(wire=wire_name, batch_clients=True)
+    reps = eng.run_events(pX, pD, "leave@t1:p3",
+                          ledger=FederationLedger(wire_name))
+    assert [r.tick for r in reps] == [0, 1]
+    survivors = [i for i in range(8) if i != 3]
+    assert reps[1].roles.on_time == tuple(survivors)
+    W_scratch = _scratch_W(wire_name, pX, pD, survivors)
+    assert np.array_equal(np.asarray(reps[1].W), W_scratch)
+    # and agrees with the one-shot engine round over the survivors
+    W_round = FederationEngine(wire=wire_name).run(
+        [pX[i] for i in survivors], [pD[i] for i in survivors]).W
+    np.testing.assert_allclose(np.asarray(reps[1].W),
+                               np.asarray(W_round),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("wire_name", ["gram", "svd"])
+def test_leave_under_dropout_late_join_scenario(wire_name):
+    """Unlearning composes with availability: dropped clients never
+    join, late clients join at tick 1, and the leave still bit-matches
+    the surviving union."""
+    P = 10
+    pX, pD = _parts(P=P, alpha=0.4)       # ragged shards
+    sc = Scenario(dropout=0.3, late_join=0.2, seed=4)
+    roles = sc.roles(P)
+    victim = roles.on_time[0]
+    eng = FederationEngine(wire=wire_name, scenario=sc,
+                           batch_clients=True)
+    reps = eng.run_events(pX, pD, f"leave@t2:p{victim}",
+                          ledger=FederationLedger(wire_name))
+    assert [r.tick for r in reps] == [0, 1, 2]
+    survivors = sorted(set(roles.participants) - {victim})
+    assert reps[-1].roles.on_time == tuple(survivors)
+    assert np.array_equal(
+        np.asarray(reps[-1].W),
+        _scratch_W(wire_name, pX, pD, survivors,
+                   batch=(wire_name == "svd")))
+
+
+def test_leave_after_checkpoint_restore(tmp_path):
+    """Save mid-federation, restore, apply the leave: still bit-exact."""
+    pX, pD = _parts()
+    eng = FederationEngine(wire="gram", batch_clients=True)
+    led = FederationLedger("gram")
+    eng.run_events(pX, pD, "none", ledger=led)          # tick 0: join all
+    path = os.path.join(tmp_path, "ledger.npz")
+    led.save(path)
+    led2 = FederationLedger.restore(path)
+    assert led2.tick == 0 and led2.clients == led.clients
+    reps = eng.run_events(pX, pD, "leave@t1:p5", ledger=led2)
+    assert [r.tick for r in reps] == [1]
+    survivors = [i for i in range(8) if i != 5]
+    assert np.array_equal(np.asarray(reps[0].W),
+                          _scratch_W("gram", pX, pD, survivors))
+
+
+def test_revise_bitmatches_scratch_solve():
+    """A revision is exact: old data leaves the state entirely."""
+    pX, pD = _parts()
+    eng = FederationEngine(wire="gram", batch_clients=True)
+    reps = eng.run_events(pX, pD, "revise@t1:p2",
+                          ledger=FederationLedger("gram"))
+    # reference: a federation where client 2 only ever published the
+    # revised shard (default drill: oldest quarter dropped)
+    w = get_wire("gram")
+    led = FederationLedger(w)
+    for i in range(8):
+        cut = pX[i].shape[0] // 4 if i == 2 else 0
+        led.join(i, w.local_stats(pX[i][cut:], pD[i][cut:]))
+    assert np.array_equal(np.asarray(reps[-1].W), np.asarray(led.solve()))
+    assert reps[-1].changed == (2,)
+    assert reps[-1].n_samples < reps[0].n_samples
+
+
+# ------------------------------------------------- delta ≡ full re-agg
+@pytest.mark.parametrize("wire_name", ["gram", "svd"])
+def test_delta_rounds_bitmatch_full_reaggregation(wire_name):
+    """Acceptance: per-tick W identical whether only changed clients
+    recompute (delta) or the whole federation re-aggregates."""
+    pX, pD = _parts(alpha=0.4)
+    tl = Timeline.parse("events=leave@t1:p3,revise@t2:p0,join@t3:p3")
+    r_delta = FederationEngine(wire=wire_name, batch_clients=True) \
+        .run_events(pX, pD, tl, ledger=FederationLedger(wire_name))
+    r_full = FederationEngine(wire=wire_name, batch_clients=True) \
+        .run_events(pX, pD, tl, ledger=FederationLedger(wire_name),
+                    delta=False)
+    assert len(r_delta) == len(r_full) == 4
+    for a, b in zip(r_delta, r_full):
+        assert np.array_equal(np.asarray(a.W), np.asarray(b.W)), a.tick
+    # the whole point: delta ticks recompute only the changed clients
+    assert r_delta[1].dispatches == 0            # a leave computes nobody
+    assert r_full[1].dispatches >= 1
+    assert r_delta[2].wire_bytes < r_full[2].wire_bytes
+
+
+def test_run_events_stream_transport_keeps_chunk_pass():
+    """On the stream transport, run_events clients chunk-fold even with
+    batch_clients set — one scan dispatch per changed client, never the
+    stacked whole-shard fleet pass."""
+    pX, pD = _parts(P=5)
+    eng = FederationEngine(wire="gram", transport="stream", chunks=3,
+                           batch_clients=True)
+    reps = eng.run_events(pX, pD, "revise@t1:p0",
+                          ledger=FederationLedger("gram"))
+    assert reps[0].dispatches == 5 and reps[1].dispatches == 1
+    r_local = FederationEngine(wire="gram").run_events(
+        pX, pD, "revise@t1:p0", ledger=FederationLedger("gram"))
+    np.testing.assert_allclose(np.asarray(reps[-1].W),
+                               np.asarray(r_local[-1].W),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_events_straggler_delays_move_train_time_not_W():
+    """The scenario's simulated stragglers gate event rounds too."""
+    pX, pD = _parts(P=6)
+    base = FederationEngine(wire="gram").run_events(
+        pX, pD, "none", ledger=FederationLedger("gram"))
+    sc = Scenario(straggler_frac=0.5, straggler_delay=0.5, seed=2)
+    slow = FederationEngine(wire="gram", scenario=sc).run_events(
+        pX, pD, "none", ledger=FederationLedger("gram"))
+    assert np.array_equal(np.asarray(base[0].W), np.asarray(slow[0].W))
+    assert slow[0].train_time >= 0.5 and max(slow[0].roles.delays) == 0.5
+    # simulated idle time never counts as compute
+    assert slow[0].cpu_time < 3 * 0.5
+
+
+def test_run_events_matches_single_round():
+    """An event-free timeline is the paper's one-shot round."""
+    pX, pD = _parts()
+    reps = FederationEngine(wire="gram").run_events(
+        pX, pD, "none", ledger=FederationLedger("gram"))
+    W_round = FederationEngine(wire="gram").run(pX, pD).W
+    assert len(reps) == 1
+    np.testing.assert_allclose(np.asarray(reps[0].W),
+                               np.asarray(W_round),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------ checkpointing
+def test_checkpoint_roundtrip_bitmatches_uninterrupted(tmp_path):
+    """stop → restore → continue ≡ never stopping, bit for bit."""
+    pX, pD = _parts()
+    tl = "events=leave@t1:p1,revise@t2:p4,join@t3:p1"
+    led_a = FederationLedger("gram")
+    eng = FederationEngine(wire="gram", batch_clients=True)
+    reps_a = eng.run_events(pX, pD, tl, ledger=led_a)
+
+    led_b = FederationLedger("gram")
+    eng2 = FederationEngine(wire="gram", batch_clients=True)
+    # run ticks 0..1, checkpoint, restore, continue 2..3
+    eng2.run_events(pX, pD, "leave@t1:p1", ledger=led_b)
+    path = os.path.join(tmp_path, "mid.npz")
+    led_b.save(path)
+    led_c = FederationLedger.restore(path)
+    # the restored registry is the saved one, bit for bit
+    assert led_c.clients == led_b.clients
+    for cid in led_b.clients:
+        for x, y in zip(led_b.registry[cid], led_c.registry[cid]):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+    reps_c = eng2.run_events(pX, pD, tl, ledger=led_c)
+    assert [r.tick for r in reps_c] == [2, 3]
+    assert np.array_equal(np.asarray(reps_a[-1].W),
+                          np.asarray(reps_c[-1].W))
+
+
+def test_checkpoint_roundtrip_svd(tmp_path):
+    pX, pD = _parts(P=4)
+    led = FederationLedger("svd")
+    w = led.wire
+    for i in range(4):
+        led.join(i, w.local_stats(pX[i], pD[i]))
+    path = os.path.join(tmp_path, "svd.npz")
+    led.save(path)
+    led2 = FederationLedger.restore(path)
+    assert np.array_equal(np.asarray(led.solve()),
+                          np.asarray(led2.solve()))
+
+
+# ------------------------------------------------ state machine errors
+def test_ledger_state_machine_errors():
+    pX, pD = _parts(P=3)
+    w = get_wire("gram")
+    led = FederationLedger(w)
+    with pytest.raises(ValueError, match="empty federation"):
+        led.solve()
+    st = w.local_stats(pX[0], pD[0])
+    led.join(0, st)
+    with pytest.raises(ValueError, match="client 0: already active"):
+        led.join(0, st)
+    with pytest.raises(ValueError, match="client 2: not active"):
+        led.leave(2)
+    with pytest.raises(ValueError, match="client 1: not active"):
+        led.revise(1, st)
+    bad = type(st)(G=st.G * np.nan, m_vec=st.m_vec, n=st.n)
+    with pytest.raises(ValueError, match="non-finite"):
+        led.join(1, bad)
+    # a NaN in a LATER leaf must not leave the state partially folded
+    bad_tail = type(st)(G=st.G, m_vec=st.m_vec * np.nan, n=st.n)
+    W_before = np.asarray(led.solve())
+    with pytest.raises(ValueError, match="non-finite"):
+        led.join(1, bad_tail)
+    with pytest.raises(ValueError, match="non-finite"):
+        led.revise(0, bad_tail)
+    assert led.clients == (0,)
+    assert np.array_equal(np.asarray(led.solve()), W_before)
+
+
+def test_ledger_float_path_tracks_exact_path():
+    """exact=False (float merge_signed downdates) drifts only by
+    rounding from the exact accumulator."""
+    pX, pD = _parts()
+    w = get_wire("gram")
+    exact = FederationLedger(w)
+    fp = FederationLedger(w, exact=False)
+    assert exact.exact and not fp.exact
+    for led in (exact, fp):
+        for i in range(8):
+            led.join(i, w.local_stats(pX[i], pD[i]))
+        led.leave(3)
+        led.revise(0, w.local_stats(pX[0][50:], pD[0][50:]))
+    np.testing.assert_allclose(np.asarray(fp.solve()),
+                               np.asarray(exact.solve()),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------ timeline spec
+def test_timeline_parse():
+    tl = Timeline.parse("events=join@t1:p5,leave@t3:p2,revise@t4:p7")
+    assert tl.events == (TimelineEvent(1, "join", 5),
+                         TimelineEvent(3, "leave", 2),
+                         TimelineEvent(4, "revise", 7))
+    # ranges, bare tokens, tick events, optional t/p prefixes
+    tl = Timeline.parse("join@1:p2-p4,tick@t9")
+    assert tl.events == (TimelineEvent(1, "join", 2),
+                         TimelineEvent(1, "join", 3),
+                         TimelineEvent(1, "join", 4),
+                         TimelineEvent(9, "tick"))
+    assert Timeline.parse("none") == Timeline()
+    assert Timeline.parse(None) == Timeline()
+
+
+@pytest.mark.parametrize("bad", ["evict@t1:p0", "join@t1", "join:p2",
+                                 "join@t1:p5-p3", "events=", "join@t-1:p0"])
+def test_timeline_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError, match="timeline"):
+        Timeline.parse(bad)
+
+
+def test_timeline_schedule_bounds_and_admission():
+    tl = Timeline.parse("leave@t1:p9")
+    with pytest.raises(ValueError, match="outside 0..7"):
+        tl.schedule(8)
+    # a client whose first event is join is NOT auto-admitted; one
+    # first mentioned by leave IS (so the leave has something to leave)
+    sched = dict(Timeline.parse("join@t2:p1,leave@t1:p0").schedule(3))
+    tick0 = [(e.kind, e.client) for e in sched[0]]
+    assert ("join", 0) in tick0 and ("join", 2) in tick0
+    assert ("join", 1) not in tick0
+
+
+def test_run_events_rejects_mesh_and_mismatch():
+    pX, pD = _parts(P=3)
+    eng = FederationEngine(wire="gram", transport="mesh")
+    with pytest.raises(ValueError, match="mesh"):
+        eng.run_events(pX, pD, "none")
+    eng2 = FederationEngine(wire="gram")
+    with pytest.raises(ValueError, match="length mismatch"):
+        eng2.run_events(pX, pD[:2], "none")
+
+
+def test_continued_run_admits_new_clients():
+    """Regression: a restored ledger continued over a GROWN client pool
+    must admit the new clients at the first new tick, not silently drop
+    their (skipped) tick-0 auto-join."""
+    pX, pD = _parts(P=8)
+    eng = FederationEngine(wire="gram", batch_clients=True)
+    led = FederationLedger("gram")
+    eng.run_events(pX[:6], pD[:6], "leave@t1:p2", ledger=led)
+    assert led.clients == (0, 1, 3, 4, 5)
+    reps = eng.run_events(pX, pD, "tick@t3", ledger=led)
+    # clients 6 and 7 auto-join at the first continued tick (2)
+    assert [r.tick for r in reps] == [2, 3]
+    assert reps[0].changed == (6, 7)
+    assert led.clients == (0, 1, 3, 4, 5, 6, 7)
+    assert np.array_equal(np.asarray(reps[-1].W),
+                          _scratch_W("gram", pX, pD, led.clients))
+
+
+def test_run_events_rejects_shrunken_client_pool():
+    """A restored federation cannot continue over fewer shards than its
+    active clients — fail loudly instead of a KeyError mid-tick."""
+    pX, pD = _parts(P=4)
+    led = FederationLedger("gram")
+    w = led.wire
+    for i in range(4):
+        led.join(i, w.local_stats(pX[i], pD[i]))
+    eng = FederationEngine(wire="gram")
+    with pytest.raises(ValueError, match="active clients up to id 3"):
+        eng.run_events(pX[:3], pD[:3], "none", ledger=led)
+
+
+# ------------------------------------------------- scenario.parse fix
+@pytest.mark.parametrize("spec,needle", [
+    ("nope=1", "nope=1"),
+    ("dropout=-0.3", "dropout=-0.3"),
+    ("dropout=1.5", "dropout=1.5"),
+    ("late_join=2", "late_join=2"),
+    ("straggler_frac=-1", "straggler_frac=-1"),
+    ("straggler_delay=-0.5", "straggler_delay=-0.5"),
+    ("alpha=0", "alpha=0"),
+    ("dropout=abc", "dropout=abc"),
+    ("seed=1.5", "seed=1.5"),
+    ("partition=sorted", "partition=sorted"),
+])
+def test_scenario_parse_rejects_malformed_with_token(spec, needle):
+    """Regression: malformed specs used to pass silently — now every
+    rejection names the offending token."""
+    with pytest.raises(ValueError) as ei:
+        Scenario.parse(spec)
+    assert needle in str(ei.value)
+
+
+def test_scenario_parse_still_accepts_valid():
+    sc = Scenario.parse("dropout=0.3,late-join=0.2,alpha=0.1,"
+                        "partition=dirichlet,seed=7")
+    assert sc.dropout == 0.3 and sc.late_join == 0.2 and sc.seed == 7
