@@ -1,0 +1,156 @@
+"""Privacy overhead and accuracy-vs-ε (EXPERIMENTS.md §Privacy).
+
+What the privacy subsystem costs, measured — Green Federated Learning
+(Yousefpour et al., 2023) insists privacy mechanisms be priced, not
+assumed:
+
+* **overhead rows** — one engine round per policy (``none`` baseline,
+  ``secagg``, ``dp`` at ε=1, ``secagg+dp``) at the same P and shards:
+  wall, Σ CPU (client mask/clip/noise time included — the engine times
+  the privacy step into ``client_times``), upload bytes (secagg's
+  ring-widened uploads show here), and the uplink radio energy of
+  those bytes via the J/byte model (``energy.uplink_joules``),
+* **accuracy-vs-ε curve** — ``dp`` runs at ε ∈ {0.5, 1, 4, ∞} plus the
+  unclipped non-private baseline; ε=∞ is clip-only (σ=0) and its ``W``
+  bit-matches the clipped baseline (asserted in tests/test_privacy.py).
+
+Results merge into ``BENCH_fedround.json`` under the ``"privacy"`` key
+(preserving the fedround/ledger sections). ``scripts/ci_smoke.sh``
+asserts the section is well-formed and that secagg Σ CPU stays within
+2× of the baseline round.
+
+``PYTHONPATH=src python -m benchmarks.privacy_bench [--quick] [--json PATH]``
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from repro.core import activations as acts
+from repro.core import predict_labels
+from repro.core.engine import FederationEngine
+from repro.data import partition, synthetic
+from repro.energy import uplink_joules
+from repro.privacy import PrivacyPolicy
+
+from .fedround_bench import JSON_DEFAULT
+
+P_MAIN = 8
+SAMPLES_PER_CLIENT = 8192       # client compute big enough that the
+P_QUICK = 4                     # masking overhead is measured against
+SAMPLES_QUICK = 2048            # real work, not dispatch noise
+EPS_GRID = [0.5, 1.0, 4.0, math.inf]
+CLIP = 4.0                      # ≈ E‖x‖ for 18 unit-variance features:
+                                # clips the tail, not the bulk
+
+
+def _data(P: int, n_per: int, seed: int = 0):
+    spec = synthetic.DatasetSpec("susy", int(P * n_per / 0.7), 18, 2)
+    X, y = synthetic.generate(spec, seed=seed)
+    (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y, 0.7, seed)
+    parts = partition.iid(Xtr, ytr, P, seed=seed)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+    return pX, pD, Xte, yte
+
+
+def _accuracy(W, Xte, yte) -> float:
+    pred = predict_labels(W, Xte, act="logistic")
+    return float((np.asarray(pred) == yte).mean())
+
+
+def _round(policy, pX, pD):
+    """One warmed round: the first run compiles this policy's programs
+    (pad PRF, noise, projection — jit caches are global, so without
+    the throwaway run the first policy measured would eat every
+    compile); the second is the steady-state round the overhead bars
+    compare."""
+    engine = FederationEngine(wire="gram", privacy=policy, warmup=True)
+    engine.run(pX, pD)
+    t0 = time.perf_counter()
+    rep = engine.run(pX, pD)
+    return rep, time.perf_counter() - t0
+
+
+def run(quick: bool = False, json_path: str | None = None,
+        seed: int = 0):
+    P = P_QUICK if quick else P_MAIN
+    n_per = SAMPLES_QUICK if quick else SAMPLES_PER_CLIENT
+    pX, pD, Xte, yte = _data(P, n_per, seed)
+
+    policies = [
+        ("baseline", PrivacyPolicy()),
+        ("secagg", PrivacyPolicy(mode="secagg", seed=seed)),
+        ("dp", PrivacyPolicy(mode="dp", epsilon=1.0, clip=CLIP,
+                             seed=seed)),
+        ("secagg+dp", PrivacyPolicy(mode="secagg+dp", epsilon=1.0,
+                                    clip=CLIP, seed=seed)),
+    ]
+    rows, cpu_by = [], {}
+    for name, policy in policies:
+        rep, wall = _round(policy, pX, pD)
+        cpu_by[name] = rep.cpu_time
+        priv = rep.privacy or {}
+        rows.append({
+            "bench": "privacy", "wire": "gram", "P": P,
+            "mode": name, "wall_s": round(wall, 6),
+            "train_time": round(rep.train_time, 6),
+            "cpu_time": round(rep.cpu_time, 6),
+            "wh": rep.wh,
+            "wire_bytes": rep.wire_bytes,
+            "uplink_j": uplink_joules(rep.wire_bytes),
+            "dispatches": rep.dispatches,
+            "accuracy": _accuracy(rep.W, Xte, yte),
+            "sigma": priv.get("sigma"),
+            "upload_bytes_per_client": priv.get(
+                "upload_bytes", rep.wire_bytes // max(P, 1)),
+        })
+        print(f"[privacy] P={P} {name}: ΣCPU {rep.cpu_time:.4f}s, "
+              f"{rep.wire_bytes} B up "
+              f"({uplink_joules(rep.wire_bytes) * 1e3:.3f} mJ uplink), "
+              f"acc {rows[-1]['accuracy']:.4f}")
+
+    overhead = {name: cpu_by[name] / cpu_by["baseline"]
+                if cpu_by["baseline"] else 0.0
+                for name in cpu_by if name != "baseline"}
+    for name, frac in overhead.items():
+        print(f"[privacy] {name}: ΣCPU = {frac:.2f}× baseline")
+
+    # ---- accuracy-vs-ε (central DP, fixed clip): the one-shot curve
+    curve = {"baseline": rows[0]["accuracy"]}
+    for eps in EPS_GRID:
+        pol = PrivacyPolicy(mode="dp", epsilon=eps, clip=CLIP, seed=seed)
+        rep, _ = _round(pol, pX, pD)
+        curve[str(eps)] = _accuracy(rep.W, Xte, yte)
+        print(f"[privacy] dp eps={eps}: acc {curve[str(eps)]:.4f} "
+              f"(sigma {rep.privacy['sigma']})")
+
+    path = json_path or JSON_DEFAULT
+    payload = {"bench": "fedround", "rows": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            pass
+    payload["privacy"] = {"P": P, "samples_per_client": n_per,
+                          "clip": CLIP, "rows": rows,
+                          "cpu_overhead": overhead,
+                          "accuracy_vs_eps": curve}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[privacy] wrote {path} (privacy section, {len(rows)} rows)")
+    return rows, overhead, curve
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(args.quick, args.json)

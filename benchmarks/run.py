@@ -27,13 +27,15 @@ def main():
                     help="write BENCH_fedround.json at the repo root")
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "fig4", "table3", "scenario",
-                             "fedround", "ledger", "kernel", "roofline"],
+                             "fedround", "ledger", "privacy", "kernel",
+                             "roofline"],
                     help="run a single benchmark")
     args = ap.parse_args()
 
     from . import (fedround_bench, fig2_clients_iid, fig3_energy,
                    fig4_noniid, kernel_bench, ledger_bench,
-                   roofline_table, scenario_bench, table3_accuracy)
+                   privacy_bench, roofline_table, scenario_bench,
+                   table3_accuracy)
     from . import common
     if args.quick:
         common.CLIENTS_GRID = [1, 10, 100]
@@ -63,6 +65,9 @@ def main():
     if want("ledger") and (args.json or args.only == "ledger"):
         print("== Ledger delta rounds vs full re-aggregation ==")
         ledger_bench.run(quick=args.quick)
+    if want("privacy") and (args.json or args.only == "privacy"):
+        print("== Privacy overhead + accuracy-vs-eps ==")
+        privacy_bench.run(quick=args.quick)
     if want("kernel"):
         print("== Kernel micro-bench ==")
         kernel_bench.run()

@@ -30,6 +30,13 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
   --wire gram --transport local --scenario none --batch-clients
 
+# the privacy subsystem end-to-end on the gram wire: masked uploads
+# (bit-exact aggregate) and one-shot DP (clip + calibrated noise)
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
+  --wire gram --transport local --privacy secagg
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
+  --wire gram --transport local --privacy dp --epsilon 1.0 --clip 4.0
+
 # the event-driven ledger path end-to-end: timeline rounds with a
 # checkpoint save, then a restore-and-continue run (bit-exact state)
 LEDGER_CKPT="$(mktemp -u /tmp/ci_ledger_XXXX.npz)"
@@ -51,6 +58,9 @@ python -m benchmarks.run --json --only fedround --quick
 # acceptance bar below is stated at (measured ~3%, so the assert has
 # ~7× headroom against CI-runner noise; quick P=20 measures ~9–18%)
 python -m benchmarks.run --json --only ledger
+# the privacy bench at full size (P=8 × 8192 samples/client — the
+# shape the ≤2× secagg ΣCPU bar is stated at; measured ~1.4–1.7×)
+python -m benchmarks.run --json --only privacy
 python - <<'PY'
 import json
 d = json.load(open("BENCH_fedround.json"))
@@ -66,8 +76,25 @@ assert led["rows"], "empty ledger bench section"
 # with one changed client (generous vs the ~3% measured at P=100)
 for event, frac in led["delta_cpu_frac"].items():
     assert frac <= 0.25, f"ledger delta {event}: {frac:.1%} > 25%"
+# ISSUE 5 acceptance: the privacy section is well-formed, the ε-sweep
+# is complete, and secagg ΣCPU stays within 2× of the baseline round
+priv = d["privacy"]
+modes = {r["mode"]: r for r in priv["rows"]}
+need_p = {"mode", "cpu_time", "wire_bytes", "uplink_j", "accuracy",
+          "wall_s", "dispatches"}
+for r in priv["rows"]:
+    missing = need_p - set(r)
+    assert not missing, f"privacy row missing {missing}"
+assert {"baseline", "secagg", "dp"} <= set(modes), modes.keys()
+assert modes["secagg"]["wire_bytes"] > modes["baseline"]["wire_bytes"], \
+    "masked upload overhead must be visible in wire_bytes"
+curve = priv["accuracy_vs_eps"]
+assert {"0.5", "1.0", "4.0", "inf", "baseline"} <= set(curve), curve
+frac = priv["cpu_overhead"]["secagg"]
+assert frac <= 2.0, f"secagg SigmaCPU {frac:.2f}x > 2x baseline"
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
-      f"ledger delta fracs {led['delta_cpu_frac']})")
+      f"ledger delta fracs {led['delta_cpu_frac']}, "
+      f"secagg CPU {frac:.2f}x, acc@eps {curve})")
 PY
 
 echo "ci_smoke: OK"

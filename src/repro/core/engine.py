@@ -42,6 +42,19 @@ persisted :class:`~.ledger.FederationLedger` — one report per tick,
 with only the *changed* clients recomputing local statistics
 (DESIGN.md §9).
 
+A fourth axis, **privacy** (``privacy/policy.py``, DESIGN.md §10),
+composes with the in-process transports: ``privacy="secagg"`` masks
+every upload with pairwise pads over the exact dyadic-integer encoding
+(the coordinator phase then runs on the :class:`~..privacy.MaskedWire`
+and only ever decodes aggregates — ``W`` bit-matches the unmasked
+exact-aggregation solve), ``privacy="dp"`` clips client rows and
+perturbs the aggregate once per release, ``"secagg+dp"`` distributes
+the noise across clients under the masks. The client-side steps (clip,
+noise share, mask) are timed into ``client_times`` so privacy overhead
+shows up in the §4.1 metrics; the mesh transport (on-device float
+psum) and the fused path (per-client statistics never materialize)
+reject privacy policies loudly.
+
 Every run returns a :class:`RoundReport` with the paper's §4.1 metrics —
 train time (slowest client + coordinator), Σ CPU, Wh from process-CPU
 metering (``energy/meter.py``) — plus the per-wire upload bytes and the
@@ -110,6 +123,9 @@ class RoundReport:
     # closes and the clients whose statistics were recomputed for it
     tick: int = 0
     changed: Sequence[int] = ()
+    # privacy bookkeeping (PrivacyRun.summary() — mode, σ, (ε, δ)
+    # spent, masked upload bytes); None when the policy is "none"
+    privacy: Optional[dict] = None
 
     @property
     def client_clocks(self) -> List[float]:
@@ -159,7 +175,7 @@ class FederationEngine:
                  backend: Any = "xla", tree: bool = True, chunks: int = 4,
                  warmup: bool = False, mesh=None, axis: str = "data",
                  dtype: Any = jnp.float32, batch_clients: bool = False,
-                 fused: bool = False):
+                 fused: bool = False, privacy: Any = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
@@ -177,6 +193,53 @@ class FederationEngine:
             and hasattr(self.wire, "merge_axis")
         self.batch_clients = bool(batch_clients) or self.fused
         self._fused_cache = {}
+        # imported here, not at module top: privacy/* imports the core
+        # package, so a module-level import would cycle through a
+        # half-initialized repro.privacy during `import repro.privacy`
+        from ..privacy.policy import PrivacyPolicy
+        self.privacy = PrivacyPolicy.parse(privacy)
+        # per-client-pool-size PrivacyRun cache: successive runs over
+        # the same pool reuse one mask session, so a ledger built by an
+        # earlier run_events call stays consistent with later pads
+        self._priv_runs = {}
+        self._priv = None
+
+    # ------------------------------------------------------- privacy
+    def _begin_privacy(self, P: int):
+        """Activate the policy for a run over a ``P``-client pool."""
+        if not self.privacy.active:
+            self._priv = None
+            return None
+        if self.transport == "mesh":
+            raise ValueError(
+                "privacy policies need per-client uploads held "
+                "in-process; the mesh transport reduces on-device "
+                "(float psum) — use transport='local'|'stream'")
+        if P not in self._priv_runs:
+            self._priv_runs[P] = self.privacy.begin(P, self.wire)
+        self._priv = self._priv_runs[P]
+        return self._priv
+
+    def _cw(self):
+        """Coordinator-side wire: the masked adapter under secagg."""
+        return self._priv.coord_wire if self._priv is not None \
+            else self.wire
+
+    def _encode_stats(self, stats, time_by):
+        """Client-side privacy step (DP noise share, pairwise mask),
+        timed into ``client_times`` so privacy overhead is visible in
+        the §4.1 metrics like any other client compute."""
+        if self._priv is not None:
+            if stats:
+                # session-wide pad derivation happens once, untimed —
+                # it is not any single client's work
+                self._priv.prepare(next(iter(stats.values())))
+            for i in list(stats):
+                t0 = time.perf_counter()
+                stats[i] = self._priv.client_encode(i, stats[i])
+                time_by[i] = time_by.get(i, 0.0) + \
+                    (time.perf_counter() - t0)
+        return stats
 
     # ------------------------------------------------------------ entry
     def run(self, parts_X: Sequence, parts_d: Sequence) -> RoundReport:
@@ -184,12 +247,21 @@ class FederationEngine:
         if len(parts_X) != len(parts_d):
             raise ValueError("parts_X and parts_d length mismatch")
         parts_d = [as_2d(d) for d in parts_d]
+        priv = self._begin_privacy(len(parts_X))
+        if priv is not None and self.fused:
+            raise ValueError(
+                "the fused round path never materializes "
+                "per-client statistics, so they cannot be masked "
+                "or noised; use batch_clients=True (still one "
+                "dispatch per bucket) or drop the privacy policy")
         with EnergyMeter() as em:
             if self.transport == "mesh":
                 report = self._run_mesh(parts_X, parts_d)
             else:
                 report = self._run_inprocess(parts_X, parts_d)
         report.cpu_seconds = em.cpu_seconds
+        if priv is not None:
+            report.privacy = priv.summary()
         return report
 
     def fit(self, parts_X: Sequence, parts_d: Sequence) -> jnp.ndarray:
@@ -243,9 +315,27 @@ class FederationEngine:
         P = len(parts_X)
         if len(parts_d) != P:
             raise ValueError("parts_X and parts_d length mismatch")
+        priv = self._begin_privacy(P)
+        if priv is not None:
+            # ledger membership changes after upload, so distributed
+            # noise shares fall back to the session universe (the
+            # cached run may carry a one-shot round's cohort) — see
+            # PrivacyRun.client_encode; shards are clipped per tick
+            # inside the metered client phase (_phase_stats)
+            priv.cohort = None
         data = {i: (parts_X[i], as_2d(parts_d[i])) for i in range(P)}
         if ledger is None:
-            ledger = FederationLedger(self.wire, lam=self.lam)
+            ledger = FederationLedger(self._cw(), lam=self.lam)
+        elif priv is not None and priv.masked and \
+                getattr(ledger.wire, "session", None) is not priv.session:
+            # a masked federation's ledger must fold THIS run's ring
+            # elements — a float ledger (or one keyed to another
+            # session's pads) would silently de-anonymize or corrupt
+            raise ValueError(
+                "privacy=secagg needs a ledger on this run's masked "
+                "wire; pass ledger=None (the engine creates it) or "
+                "reuse the ledger from a previous run_events call of "
+                "this engine over the same client pool")
         elif ledger.clients and max(ledger.clients) >= P:
             # a restored federation must fit the current client pool —
             # otherwise active clients would have no data to recompute
@@ -271,6 +361,8 @@ class FederationEngine:
                 rep = self._run_tick(data, t, events, ledger, delta,
                                      revise_fn, sc_roles.delays)
             rep.cpu_seconds = em.cpu_seconds
+            if priv is not None:
+                rep.privacy = priv.summary()
             ledger.tick = t
             reports.append(rep)
         return reports
@@ -321,10 +413,18 @@ class FederationEngine:
                     ledger.leave(ev.client)
         # the engine's λ drives the solve (a restored ledger may carry
         # an older default; its lam only backs standalone ledger.solve())
-        W = ledger.solve(self.lam)
+        if self._priv is not None and self._priv.policy.dp:
+            # one release per tick: perturb a copy of the global state
+            # (the ledger itself stays noiseless) and account the spend
+            gs = self._release(ledger.global_stats(), salt=t)
+            W = ledger.wire.solve(gs, self.lam)
+            jax.block_until_ready(W)
+        else:
+            W = ledger.solve(self.lam)
         coordinator_time = time.perf_counter() - t0
         uploaded = recompute if not delta else changed
-        wire_bytes = sum(self.wire.wire_bytes(stats[i]) for i in uploaded)
+        wire_bytes = sum(self._cw().wire_bytes(stats[i])
+                         for i in uploaded)
         active = ledger.clients
         P = len(data)
         # the scenario's simulated straggler delays gate this tick too:
@@ -363,40 +463,57 @@ class FederationEngine:
         return agg
 
     def _fold(self, stats_list):
-        return self.wire.merge_tree(stats_list) if self.tree else \
-            self.wire.merge_many(stats_list)
+        cw = self._cw()
+        return cw.merge_tree(stats_list) if self.tree else \
+            cw.merge_many(stats_list)
+
+    def _release(self, agg, salt: int):
+        """Pre-solve privacy step: central-DP perturbation of (a copy
+        of) the aggregate, and the (ε, δ) accounting — one spend per
+        released model."""
+        return agg if self._priv is None else \
+            self._priv.finalize(agg, salt=salt)
 
     def _coordinator(self, stats, roles):
         """Shared merge → (first solve →) solve tail, timed."""
+        cw = self._cw()
         t0 = time.perf_counter()
         agg = self._fold([stats[i] for i in roles.on_time])
         W_first = None
         if roles.late:
             # first solve from the on-time group — a usable model — then
             # admit the late joiners incrementally (paper §3.2)
-            W_first = self.wire.solve(agg, self.lam)
+            W_first = cw.solve(self._release(agg, salt=1), self.lam)
             jax.block_until_ready(W_first)
             for i in roles.late:
-                agg = self.wire.merge(agg, stats[i])
-        W = self.wire.solve(agg, self.lam)
+                agg = cw.merge(agg, stats[i])
+        W = cw.solve(self._release(agg, salt=0), self.lam)
         jax.block_until_ready(W)
         return W, W_first, time.perf_counter() - t0
 
     def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
         roles = self.scenario.roles(len(parts_X))
+        if self._priv is not None:
+            # the round's cohort is known up front (a real coordinator
+            # announces it): distributed noise shares scale to the
+            # participants that will actually sum, not the universe
+            self._priv.cohort = len(roles.participants)
         if self.batch_clients and self.transport == "local":
             if self.fused:
                 return self._run_fused(parts_X, parts_d, roles)
             return self._run_batched(parts_X, parts_d, roles)
         stats, time_by, dispatches = self._phase_stats(
             parts_X, parts_d, roles.participants)
-        if self.warmup and roles.participants:
+        if self.warmup and roles.participants and \
+                not (self._priv is not None and self._priv.masked):
             # merge + solve compile pass (the client pass warmed inside
-            # _phase_stats) so the timed coordinator is steady-state
+            # _phase_stats) so the timed coordinator is steady-state;
+            # skipped under masking — a ring merge of one client with
+            # itself is a double upload, which the session rejects
             i0 = roles.participants[0]
             jax.block_until_ready(self.wire.solve(
                 self.wire.merge(stats[i0], stats[i0]), self.lam))
-        wire_bytes = sum(self.wire.wire_bytes(stats[i])
+        wire_bytes = sum(self._cw().wire_bytes(stats[i])
                          for i in roles.participants)
         W, W_first, coordinator_time = self._coordinator(stats, roles)
         return RoundReport(
@@ -447,10 +564,12 @@ class FederationEngine:
 
     @staticmethod
     def _share_times(time_by, idxs, ns, dt):
-        """Attribute one bucket dispatch's wall time by sample share."""
+        """Attribute one bucket dispatch's wall time by sample share
+        (added onto any already-charged client time, e.g. clipping)."""
         total = int(ns.sum())
         for i, n in zip(idxs, ns):
-            time_by[i] = dt * (int(n) / total if total else 1 / len(idxs))
+            time_by[i] = time_by.get(i, 0.0) + \
+                dt * (int(n) / total if total else 1 / len(idxs))
 
     def _phase_stats(self, parts_X, parts_d, idxs):
         """Client-phase statistics for ``idxs`` — one dispatch per shape
@@ -460,6 +579,17 @@ class FederationEngine:
         index.
         """
         stats, time_by, dispatches = {}, {}, 0
+        if self._priv is not None and self._priv.policy.dp:
+            # per-row clipping is client-side work: run it inside the
+            # metered region and charge each client's clock for it
+            # (the module docstring and privacy_bench both promise the
+            # §4.1 metrics include it)
+            clipped = {}
+            for i in idxs:
+                t0 = time.perf_counter()
+                clipped[i] = self._priv.clip(parts_X[i])
+                time_by[i] = time.perf_counter() - t0
+            parts_X = clipped
         if not (self.batch_clients and self.transport == "local"):
             if self.warmup and idxs:
                 # untimed compile pass at the first client's shapes, as
@@ -472,9 +602,11 @@ class FederationEngine:
                 t0 = time.perf_counter()
                 stats[i] = self._client_stats(parts_X[i], parts_d[i])
                 jax.block_until_ready(stats[i])
-                time_by[i] = time.perf_counter() - t0
+                time_by[i] = time_by.get(i, 0.0) + \
+                    (time.perf_counter() - t0)
                 dispatches += 1
-            return stats, time_by, dispatches
+            return self._encode_stats(stats, time_by), time_by, \
+                dispatches
         for bound, b_idxs in self._buckets(parts_X, idxs):
             if bound == 0:
                 # empty shards: per-client call (their statistics are
@@ -484,7 +616,8 @@ class FederationEngine:
                     stats[i] = self.wire.local_stats(parts_X[i],
                                                      parts_d[i])
                     jax.block_until_ready(stats[i])
-                    time_by[i] = time.perf_counter() - t0
+                    time_by[i] = time_by.get(i, 0.0) + \
+                        (time.perf_counter() - t0)
                     dispatches += 1
                 continue
             Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, b_idxs,
@@ -505,16 +638,17 @@ class FederationEngine:
             self._share_times(time_by, b_idxs, ns,
                               time.perf_counter() - t0)
             stats.update(zip(b_idxs, batch))
-        return stats, time_by, dispatches
+        return self._encode_stats(stats, time_by), time_by, dispatches
 
     def _run_batched(self, parts_X, parts_d, roles) -> RoundReport:
         stats, time_by, dispatches = self._phase_stats(
             parts_X, parts_d, roles.participants)
-        if self.warmup and roles.participants:
+        if self.warmup and roles.participants and \
+                not (self._priv is not None and self._priv.masked):
             i0 = roles.participants[0]
             jax.block_until_ready(self.wire.solve(
                 self.wire.merge(stats[i0], stats[i0]), self.lam))
-        wire_bytes = sum(self.wire.wire_bytes(stats[i])
+        wire_bytes = sum(self._cw().wire_bytes(stats[i])
                          for i in roles.participants)
         W, W_first, coordinator_time = self._coordinator(stats, roles)
         return RoundReport(

@@ -141,7 +141,12 @@ class FederationLedger:
         self.tick = -1                 # last applied tick (-1 = fresh)
         self.n_events = 0
         self.subtractable = hasattr(self.wire, "subtract")
-        self.exact = bool(exact) and self.subtractable
+        # wires whose merge algebra is already exact (the masked wire's
+        # integer ring arithmetic) skip the dyadic accumulator: their
+        # merge_signed never rounds, so the float-drift argument above
+        # doesn't apply and their stats aren't float leaves anyway
+        self.exact = bool(exact) and self.subtractable \
+            and not getattr(self.wire, "exact_by_construction", False)
         self._acc: Optional[ExactAccumulator] = None
         self._agg = None               # float aggregate / re-merge cache
 
@@ -156,10 +161,15 @@ class FederationLedger:
         active or departed. Auto-admission must not override either."""
         return tuple(sorted(set(self.registry) | self.departed))
 
-    @staticmethod
-    def _validate(stats) -> None:
+    def _validate(self, stats) -> None:
         """Reject non-finite statistics BEFORE any state mutates — a
-        failed event must leave registry and global state untouched."""
+        failed event must leave registry and global state untouched.
+        Wires with non-float stats (the masked wire's ring elements)
+        supply their own ``validate_stats`` hook instead."""
+        hook = getattr(self.wire, "validate_stats", None)
+        if hook is not None:
+            hook(stats)
+            return
         for leaf in jax.tree_util.tree_flatten(stats)[0]:
             arr = np.asarray(jax.device_get(leaf), np.float64)
             if not np.all(np.isfinite(arr)):
@@ -221,6 +231,13 @@ class FederationLedger:
     # ------------------------------------------------------ checkpoint
     def state_tree(self):
         """Checkpointable pytree: registry + metadata (flat-npz safe)."""
+        if not getattr(self.wire, "checkpointable", True):
+            raise NotImplementedError(
+                f"ledger on wire {self.wire.name!r} does not "
+                "checkpoint: masked ring elements have no flat-npz "
+                "registry form (and restoring one would need the mask "
+                "session re-keyed); checkpoint an unmasked federation "
+                "or keep the masked ledger in memory")
         meta = {"wire": np.asarray(self.wire.name),
                 "act": np.asarray(self.wire.act),
                 "lam": np.float64(self.lam),

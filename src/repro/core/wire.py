@@ -161,6 +161,25 @@ class SvdWire(_WireBase):
     def merge(self, a: ClientStats, b: ClientStats) -> ClientStats:
         return solver.merge_stats(a, b)
 
+    def secagg_encode(self, stats: Optional[ClientStats] = None):
+        """Exact-masking capability probe — the svd wire has none.
+
+        Secure aggregation (``privacy/secagg.py``) masks each upload
+        with pairwise pads that must cancel through the coordinator
+        merge. The Iwen–Ong merge recombines singular factors through
+        an SVD — it is not additive, so a pad added to ``U·S`` does
+        not cancel against its negation in another client's factors
+        (and there is no exact dyadic encoding of the merge to mask
+        over). Raising here (rather than silently falling back to a
+        different wire or skipping the masking) keeps the privacy
+        policy honest; use :class:`GramWire` for ``privacy=secagg``.
+        """
+        raise NotImplementedError(
+            "wire 'svd' cannot carry masked (secagg) uploads: the "
+            "Iwen-Ong singular-factor merge is not additive, so "
+            "pairwise masks cannot cancel through it; use wire='gram' "
+            "for privacy=secagg")
+
     def merge_oneshot(self, stats_list) -> ClientStats:
         """One wide SVD over all partials (what a mesh all_gather feeds)."""
         return solver.merge_many(stats_list)
@@ -279,6 +298,16 @@ class GramWire(_WireBase):
 
     def merge(self, a: GramStats, b: GramStats) -> GramStats:
         return solver.merge_gram(a, b)
+
+    def secagg_encode(self, stats: Optional[GramStats] = None):
+        """The gram wire IS secagg-capable: its statistics are sums of
+        per-sample terms, so the ledger's exact dyadic-integer image of
+        a :class:`GramStats` is already the additive encoding pairwise
+        masks cancel over — the encoding is the identity here. Called
+        with no argument as the capability probe
+        (``privacy/policy.py``); the svd wire's override raises.
+        """
+        return stats
 
     def merge_signed(self, a: GramStats, b: GramStats,
                      sign: int = 1) -> GramStats:

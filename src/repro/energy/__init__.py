@@ -1,2 +1,2 @@
-from .meter import (DEVICE_WATTS, EnergyMeter, predict_crossover,
-                    watt_hours)
+from .meter import (DEVICE_WATTS, J_PER_BYTE, CostModel, EnergyMeter,
+                    predict_crossover, uplink_joules, watt_hours)

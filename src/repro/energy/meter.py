@@ -9,6 +9,9 @@
   centralized energy crossover (beyond-paper: the paper only measures it;
   the model predicts the client count where federation stops paying off,
   Fig. 3/5's crossing point).
+* ``uplink_joules`` / ``CostModel.comm_joules`` — the J/byte radio
+  model: green accounting for the upload leg, fed by a round's
+  measured ``wire_bytes`` (and so pricing the secagg masking overhead).
 """
 from __future__ import annotations
 
@@ -17,9 +20,22 @@ import time
 
 DEVICE_WATTS = 65.0   # Intel i7-10700 TDP (paper's host)
 
+# uplink radio energy per byte. 25 nJ/bit ≈ the LTE/Wi-Fi range the
+# distributed-vs-federated footprint analysis of Savazzi et al. (2022)
+# works in; clients in the paper's setting upload once, so uplink is
+# the only wireless term that matters
+J_PER_BYTE = 2e-7
+
 
 def watt_hours(cpu_seconds: float, watts: float = DEVICE_WATTS) -> float:
     return watts * cpu_seconds / 3600.0
+
+
+def uplink_joules(wire_bytes: int, j_per_byte: float = J_PER_BYTE) -> float:
+    """Radio energy of an upload — feed it ``RoundReport.wire_bytes``
+    to price a measured round's communication (secagg's widened ring
+    uploads included; see benchmarks/privacy_bench.py)."""
+    return float(wire_bytes) * j_per_byte
 
 
 class EnergyMeter:
@@ -65,6 +81,7 @@ class CostModel:
     alpha: float = 1.2
     overhead_flops: float = 5e7
     flops_per_joule: float = 2e9   # effective CPU efficiency
+    j_per_byte: float = J_PER_BYTE  # uplink radio energy (J/byte model)
 
     def client_flops(self, n_p, m, c=1):
         return (self.k_svd * c * m * m * (n_p ** self.alpha)
@@ -74,14 +91,35 @@ class CostModel:
         r = m  # rank capped at m once n_p ≥ m
         return self.k_svd * c * m * m * P * r + c * m * m
 
-    def federated_joules(self, n, m, P, c=1):
+    def comm_joules(self, nbytes) -> float:
+        """Radio energy of ``nbytes`` of uplink (the J/byte model).
+
+        Feed it ``RoundReport.wire_bytes`` to price a *measured* round;
+        the analytic entry points below thread a per-client upload size
+        through it so federated accounting covers communication — the
+        term that prices secagg's ring-widened uploads (DESIGN.md §10)
+        and that Savazzi et al. (2022) show can dominate at scale.
+        """
+        return float(nbytes) * self.j_per_byte
+
+    def federated_joules(self, n, m, P, c=1, upload_bytes_per_client=0):
+        """Compute + uplink energy of one federated round.
+
+        ``upload_bytes_per_client`` is each client's publication size
+        (e.g. ``Wire.stats_bytes``, or the masked-wire equivalent);
+        every client uploads once, so the comm term is linear in P —
+        monotonicity the unit tests pin.
+        """
         per = self.client_flops(n / P, m, c) + self.overhead_flops
         return (P * per + self.coordinator_flops(P, m, c)) \
-            / self.flops_per_joule
+            / self.flops_per_joule \
+            + P * self.comm_joules(upload_bytes_per_client)
 
-    def centralized_joules(self, n, m, c=1):
+    def centralized_joules(self, n, m, c=1, upload_bytes=0):
+        """One big box; ``upload_bytes`` prices shipping the raw data
+        there (0 = data already local, the paper's setting)."""
         return (self.client_flops(n, m, c) + c * m * m) \
-            / self.flops_per_joule
+            / self.flops_per_joule + self.comm_joules(upload_bytes)
 
 
 def predict_crossover(n: int, m: int, c: int = 1,

@@ -30,6 +30,7 @@ from repro.core.engine import FederationEngine, TRANSPORTS
 from repro.core.ledger import FederationLedger
 from repro.core.scenario import Scenario, Timeline
 from repro.data import partition, synthetic
+from repro.privacy import PrivacyPolicy
 
 
 def main():
@@ -71,6 +72,21 @@ def main():
                     help="timeline runs re-aggregate every active "
                          "client each tick (the baseline delta rounds "
                          "are priced against)")
+    ap.add_argument("--privacy", default="none",
+                    choices=["none", "secagg", "dp", "secagg+dp"],
+                    help="privacy policy (privacy/policy.py): secagg = "
+                         "pairwise-masked uploads (gram wire, bit-exact "
+                         "aggregate), dp = clip + one-shot Gaussian "
+                         "output perturbation, secagg+dp = distributed "
+                         "noise under the masks")
+    ap.add_argument("--epsilon", type=float, default=float("inf"),
+                    help="DP budget per released model (inf = clip "
+                         "only, no noise)")
+    ap.add_argument("--delta", type=float, default=1e-5,
+                    help="DP delta (one-shot Gaussian mechanism)")
+    ap.add_argument("--clip", type=float, default=1.0,
+                    help="per-row L2 clip bound applied client-side "
+                         "before statistics (dp modes)")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -86,16 +102,19 @@ def main():
                               seed=args.seed)
     (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
     P = min(args.clients, len(ytr) // 2)
+    policy = PrivacyPolicy(mode=args.privacy, epsilon=args.epsilon,
+                           delta=args.delta, clip=args.clip,
+                           seed=args.seed)
     engine = FederationEngine(wire=args.wire, transport=args.transport,
                               scenario=scenario, act="logistic",
                               lam=args.lam, backend=args.backend,
                               chunks=args.chunks, warmup=True,
                               batch_clients=args.batch_clients,
-                              fused=args.fused)
+                              fused=args.fused, privacy=policy)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
-          f"transport={args.transport}")
+          f"transport={args.transport} privacy={policy.mode}")
 
     if args.timeline is not None:
         run_timeline(args, engine, Xtr, ytr, Xte, yte, P)
@@ -117,6 +136,23 @@ def main():
     print(f"[fedtrain] wire bytes uploaded ({args.wire}): "
           f"{report.wire_bytes / 1024:.1f} KiB | client-phase dispatches: "
           f"{report.dispatches}")
+    _print_privacy(report)
+
+
+def _print_privacy(report):
+    p = report.privacy
+    if not p:
+        return
+    line = f"[fedtrain] privacy={p['mode']}"
+    if p.get("upload_bytes"):
+        line += (f" | masked upload {p['upload_bytes'] / 1024:.1f} KiB"
+                 f"/client ({p['mod_bits']}-bit ring)")
+    if p["releases"]:
+        sig = p["sigma"] if p["sigma"] is not None else 0.0
+        line += (f" | spent (ε={p['eps_spent']:g}, "
+                 f"δ={p['delta_spent']:g}) over {p['releases']} "
+                 f"release(s), σ={sig:.4g} (clip {p['clip']:g})")
+    print(line)
 
 
 def run_timeline(args, engine, Xtr, ytr, Xte, yte, P):
@@ -124,7 +160,20 @@ def run_timeline(args, engine, Xtr, ytr, Xte, yte, P):
     from repro.core import activations as acts
     timeline = Timeline.parse(args.timeline)
     ledger = None
-    if args.ledger_ckpt and os.path.exists(args.ledger_ckpt):
+    if engine.privacy.active:
+        if args.ledger_ckpt:
+            # secagg: masked ring elements don't checkpoint at all.
+            # dp: a restored registry's statistics may predate the
+            # clip bound σ was calibrated against — releasing over
+            # them would silently void the (ε, δ) claim.
+            raise SystemExit(
+                "[fedtrain] --ledger-ckpt is incompatible with "
+                "--privacy: masked ledgers do not checkpoint, and a "
+                "restored registry cannot prove its statistics were "
+                "clipped at this run's --clip (the sensitivity bound "
+                "behind sigma); drop one of the two")
+        # the engine mints the (masked) ledger itself when needed
+    elif args.ledger_ckpt and os.path.exists(args.ledger_ckpt):
         ledger = FederationLedger.restore(args.ledger_ckpt,
                                           backend=args.backend or "xla")
         if ledger.wire.name != args.wire:
@@ -137,7 +186,7 @@ def run_timeline(args, engine, Xtr, ytr, Xte, yte, P):
                   f"{ledger.lam:g}; continuing with --lam {args.lam:g}")
         print(f"[fedtrain] restored ledger from {args.ledger_ckpt}: "
               f"{len(ledger.clients)} clients, tick {ledger.tick}")
-    if ledger is None:
+    if ledger is None and not engine.privacy.secagg:
         ledger = FederationLedger(engine.wire, lam=engine.lam)
     parts = engine.scenario.make_parts(Xtr, ytr, P)
     pX = [p[0] for p in parts]
@@ -154,6 +203,8 @@ def run_timeline(args, engine, Xtr, ytr, Xte, yte, P):
               f"{r.dispatches} dispatches")
     if not reports:
         print("[fedtrain] timeline: no ticks beyond the restored state")
+    else:
+        _print_privacy(reports[-1])
     total_cpu = sum(r.cpu_time for r in reports)
     total_wh = sum(r.wh for r in reports)
     mode = "full re-agg" if args.full_reagg else "delta"

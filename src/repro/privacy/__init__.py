@@ -1,0 +1,25 @@
+"""Privacy subsystem: masked secure aggregation + one-shot DP.
+
+The paper's third pillar ("preserve data privacy by design") as a real
+layer over the wire statistics (DESIGN.md §10):
+
+* :mod:`.secagg` — Bonawitz-style pairwise additive masking over the
+  ledger's exact dyadic-integer encoding; mask cancellation is bitwise,
+* :mod:`.dp`     — one-shot output perturbation (clip → analytic
+  sensitivity → exactly calibrated Gaussian) with a trivially composed
+  ``(ε, δ)`` accountant, exploiting the method's single round,
+* :mod:`.policy` — the ``PrivacyPolicy`` axis the engine threads
+  through every transport, and the :class:`MaskedWire` adapter.
+"""
+from .dp import (DPAccountant, calibrate_sigma, clip_rows,
+                 gaussian_delta, noise_stats, sensitivity,
+                 validate_budget)
+from .policy import MODES, MaskedWire, PrivacyPolicy, PrivacyRun
+from .secagg import MaskedStats, SecAggSession, default_mod_bits
+
+__all__ = [
+    "DPAccountant", "MODES", "MaskedStats", "MaskedWire",
+    "PrivacyPolicy", "PrivacyRun", "SecAggSession", "calibrate_sigma",
+    "clip_rows", "default_mod_bits", "gaussian_delta", "noise_stats",
+    "sensitivity", "validate_budget",
+]

@@ -1,0 +1,382 @@
+"""PrivacyPolicy: the privacy axis of a federated round.
+
+Composes with the engine's existing axes (wire × transport × scenario,
+DESIGN.md §7) as a fourth: ``none | secagg | dp | secagg+dp``.
+
+* ``secagg``     — pairwise-masked uploads (:mod:`.secagg`): the
+  coordinator only ever decodes *sums*; the solved ``W`` bit-matches
+  the unmasked exact-aggregation (ledger) solve.
+* ``dp``         — central one-shot DP (:mod:`.dp`): clients clip,
+  the coordinator perturbs the aggregate once before each solve.
+  Trusted-aggregator model: protects the released model, not the
+  uploads.
+* ``secagg+dp``  — distributed DP: every client adds a ``σ/√P`` noise
+  share *before* masking, so the coordinator sees neither raw uploads
+  nor the noiseless aggregate; the decoded sum carries ~σ total noise.
+
+The :class:`MaskedWire` adapter makes masked aggregation an ordinary
+:class:`~..core.wire.Wire`: ``merge`` is a ring add, ``solve`` is
+recover-boundary-pads → decode-once → base solve, and ``wire_bytes``
+reports the (much larger) ring-element upload so the secagg byte
+overhead stays visible in every report and benchmark.
+
+A policy is stateless and reusable; :meth:`PrivacyPolicy.begin` mints
+the per-federation state (mask session, accountant, noise keys) as a
+:class:`PrivacyRun` — the engine creates one per client-pool size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from ..core.solver import GramStats
+from ..core.wire import _WireBase
+from . import dp as _dp
+from .secagg import MaskedStats, SecAggSession
+
+MODES = ("none", "secagg", "dp", "secagg+dp")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyPolicy:
+    """What privacy mechanism a federation runs, and its parameters.
+
+    ``epsilon``/``delta`` budget one release (dp modes); ``clip`` is
+    the per-row L2 bound clients apply before computing statistics;
+    ``seed`` keys both the pairwise-mask PRF and the DP noise;
+    ``sensitivity`` overrides the analytic ``(G, m_vec)`` bound for
+    custom additive wires; ``mod_bits`` overrides the secagg ring
+    width (default: sized to the wire dtype, :func:`~.secagg.default_mod_bits`).
+    """
+    mode: str = "none"
+    epsilon: float = math.inf
+    delta: float = 1e-5
+    clip: float = 1.0
+    seed: int = 0
+    sensitivity: Optional[float] = None
+    mod_bits: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown privacy mode {self.mode!r} "
+                             f"(expected one of {MODES})")
+        if self.dp:
+            _dp.validate_budget(self.epsilon, self.delta)
+            if self.clip <= 0:
+                raise ValueError(
+                    f"privacy mode {self.mode!r} needs clip > 0, "
+                    f"got {self.clip}")
+
+    # ------------------------------------------------------- predicates
+    @property
+    def secagg(self) -> bool:
+        return self.mode in ("secagg", "secagg+dp")
+
+    @property
+    def dp(self) -> bool:
+        return self.mode in ("dp", "secagg+dp")
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "none"
+
+    @classmethod
+    def parse(cls, spec: Any) -> "PrivacyPolicy":
+        """Resolve ``None`` / a mode string / a policy instance."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls(mode=spec.strip().lower() or "none")
+        raise ValueError(f"cannot parse privacy spec {spec!r}")
+
+    def begin(self, n_clients: int, wire) -> Optional["PrivacyRun"]:
+        """Per-federation state for ``n_clients`` over ``wire``
+        (``None`` when the policy is inactive)."""
+        if not self.active:
+            return None
+        session = None
+        base = wire
+        if self.secagg:
+            # capability probe: additive wires return their (identity)
+            # exact encoding, the svd wire raises NotImplementedError
+            probe = getattr(wire, "secagg_encode", None)
+            if probe is None:
+                raise NotImplementedError(
+                    f"wire {getattr(wire, 'name', wire)!r} declares no "
+                    "secagg encoding (see GramWire.secagg_encode); "
+                    "secure aggregation needs an additive wire")
+            probe()
+            session = SecAggSession(
+                n_clients, seed=self.seed,
+                dtype=getattr(wire, "dtype", np.float32),
+                mod_bits=self.mod_bits)
+        run = PrivacyRun(policy=self, base_wire=base, session=session,
+                         coord_wire=base, n_clients=n_clients)
+        if session is not None:
+            run.coord_wire = MaskedWire(base, session,
+                                        post_decode=run.post_decode)
+        return run
+
+
+class MaskedWire(_WireBase):
+    """Wire adapter: masked ring aggregation over any additive wire.
+
+    Client side, :meth:`upload` publishes ``mask(enc(local_stats))``;
+    coordinator side the usual Wire surface works on
+    :class:`~.secagg.MaskedStats`: ``merge``/``merge_many``/
+    ``merge_tree`` are exact ring adds, ``subtract``/``merge_signed``
+    the exact downdate (so the :class:`~..core.ledger.FederationLedger`
+    runs delta rounds and exact unlearning under masking unchanged),
+    and ``solve`` recovers boundary pads, decodes the aggregate ONCE,
+    and hands it to the base wire's solve. Per-client plaintext never
+    exists coordinator-side.
+    """
+    # ring arithmetic never rounds: the ledger skips its float-drift
+    # ExactAccumulator and folds through merge_signed directly
+    exact_by_construction = True
+    # MaskedStats limbs don't fit the flat-npz registry checkpoint
+    checkpointable = False
+
+    def __init__(self, base, session: SecAggSession, post_decode=None):
+        base.secagg_encode()            # raises on non-additive wires
+        self.base = base
+        self.session = session
+        # coordinator-side hook on the decoded aggregate (the
+        # distributed-DP PSD projection rides here) — post-processing
+        # of the already-released sum, never of a single upload
+        self.post_decode = post_decode
+        self.name = f"secagg[{base.name}]"
+        self.act = base.act
+
+    # --------------------------------------------------------- client
+    def upload(self, cid: int, X, d) -> MaskedStats:
+        return self.mask(cid, self.base.local_stats(X, d))
+
+    def mask(self, cid: int, stats) -> MaskedStats:
+        return self.session.mask_upload(
+            cid, self.base.secagg_encode(stats))
+
+    def local_stats(self, X, d):
+        raise NotImplementedError(
+            "masked uploads are client-addressed (the pairwise pads "
+            "depend on WHO publishes): use upload(cid, X, d), or run "
+            "through FederationEngine(privacy='secagg')")
+
+    # ---------------------------------------------------- coordinator
+    def merge(self, a: MaskedStats, b: MaskedStats) -> MaskedStats:
+        return self.session.merge_signed(a, b, 1)
+
+    def merge_signed(self, a: MaskedStats, b: MaskedStats,
+                     sign: int = 1) -> MaskedStats:
+        return self.session.merge_signed(a, b, sign)
+
+    def subtract(self, a: MaskedStats, b: MaskedStats) -> MaskedStats:
+        return self.session.merge_signed(a, b, -1)
+
+    def unmask(self, stats: MaskedStats):
+        return self.session.unmask(stats)
+
+    def solve(self, stats: MaskedStats, lam: float = 1e-3):
+        agg = self.session.unmask(stats)
+        if self.post_decode is not None:
+            agg = self.post_decode(agg)
+        return self.base.solve(agg, lam)
+
+    def wire_bytes(self, stats: MaskedStats) -> int:
+        return self.session.upload_bytes
+
+    def stats_bytes(self, n_local: int, m_in: int, c: int) -> int:
+        base_bytes = self.base.stats_bytes(n_local, m_in, c)
+        itemsize = np.dtype(getattr(self.base, "dtype",
+                                    np.float32)).itemsize
+        return (base_bytes // itemsize) * self.session.mod_bits // 8
+
+    def mesh_reduce(self, stats, axis: str):
+        raise NotImplementedError(
+            "mesh psum reduces floats on-device; exact masking needs "
+            "the in-process transports (local|stream)")
+
+    def validate_stats(self, stats) -> None:
+        """Ledger pre-mutation validation hook: ring elements are
+        always finite; reject anything that is not a MaskedStats of
+        this session's shape."""
+        if not isinstance(stats, MaskedStats):
+            raise ValueError(
+                f"masked ledger got unmasked stats {type(stats).__name__}")
+        if stats.limbs and stats.limbs[0].shape[-1] != self.session.words:
+            raise ValueError("masked stats from a different ring width")
+
+
+@dataclasses.dataclass
+class PrivacyRun:
+    """Per-federation privacy state (minted by ``PrivacyPolicy.begin``).
+
+    Holds the mask session, the coordinator-side wire, the DP
+    accountant and the lazily calibrated σ. One instance per client
+    pool size — the engine caches them so successive ``run_events``
+    calls against the same ledger reuse identical pads.
+    """
+    policy: PrivacyPolicy
+    base_wire: Any
+    session: Optional[SecAggSession]
+    coord_wire: Any
+    n_clients: int
+    accountant: _dp.DPAccountant = dataclasses.field(
+        default_factory=_dp.DPAccountant)
+    # the cohort whose noise shares must sum to σ: the engine sets it
+    # to the round's participant count before the client phase (None →
+    # the session universe, the ledger path's conservative-bookkeeping
+    # denominator — see client_encode)
+    cohort: Optional[int] = None
+    _sigma: Optional[float] = None
+    _sens: Optional[float] = None
+    _n_encodes: int = 0
+
+    def __post_init__(self):
+        key = jax.random.key(self.policy.seed)
+        # disjoint PRF domains for mask pads vs DP noise
+        self._client_key = jax.random.fold_in(key, 1)
+        self._release_key = jax.random.fold_in(key, 2)
+
+    @property
+    def masked(self) -> bool:
+        return self.session is not None
+
+    def clip(self, X):
+        """Per-row clip of one client's shard (identity when the
+        policy carries no DP). The engine runs this inside the metered
+        client phase so clipping cost lands in ``client_times``."""
+        return _dp.clip_rows(X, self.policy.clip) if self.policy.dp \
+            else X
+
+    def prepare(self, stats) -> None:
+        """Derive the session's all-pairs pad cache OUTSIDE any
+        client's clock. A real client derives only its own P−1 pads;
+        the batched whole-session precompute is simulation bookkeeping,
+        and letting it land inside the first timed ``client_encode``
+        would report a distorted slowest-client ``train_time``."""
+        if self.masked:
+            self.session._bind(self.base_wire.secagg_encode(stats))
+            self.session._ensure_pad_sums()
+
+    # ------------------------------------------------------ client side
+    def client_encode(self, cid: int, stats):
+        """Everything a client does to its statistics before upload:
+        the per-row clip happened upstream (timed into the client
+        phase), then the distributed noise share (secagg+dp), then the
+        pairwise mask (secagg).
+
+        The noise share is ``σ/√cohort`` so the *participants'* shares
+        sum to the calibrated σ. On the one-shot round the engine sets
+        ``cohort`` to the actual participant count (so dropout does not
+        silently under-noise the final release); on the event-driven
+        ledger path membership changes after upload, so shares fall
+        back to the session universe — ``summary()['noise_share_basis']``
+        records that denominator, and the report's roles show how many
+        shares the aggregate actually carries, so an under-noised
+        release is detectable from the report instead of hidden.
+        """
+        if self.policy.dp and self.policy.secagg:
+            # a fresh draw per upload (counter-keyed): a client that
+            # re-publishes (revise, full re-agg) must never reuse its
+            # share, or differencing two releases cancels the noise
+            self._n_encodes += 1
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._client_key, cid),
+                self._n_encodes)
+            share = self.sigma(stats) / math.sqrt(self.cohort
+                                                  or self.n_clients)
+            stats = self._noise(stats, share, key)
+        if self.masked:
+            return self.coord_wire.mask(cid, stats)
+        return stats
+
+    # ------------------------------------------------- coordinator side
+    def finalize(self, stats, salt: int = 0):
+        """Pre-solve release step: accounts the ``(ε, δ)`` spend and,
+        in central-DP mode, perturbs the aggregate once. ``salt``
+        separates multiple releases (W_first, ledger ticks)."""
+        if not self.policy.dp:
+            return stats
+        self.accountant.spend(self.policy.epsilon, self.policy.delta)
+        if self.policy.secagg:          # noise entered client-side
+            return stats
+        sigma = self.sigma(stats)
+        if sigma == 0.0:
+            return stats
+        # key on the release counter too: two releases (W_first vs
+        # final, successive runs, ledger ticks) must draw independent
+        # noise — identical draws would cancel under differencing and
+        # void the composition the accountant just charged
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._release_key, salt),
+            self.accountant.releases)
+        return self.post_decode(self._noise(stats, sigma, key),
+                                force=True)
+
+    def post_decode(self, stats, force: bool = False):
+        """PSD projection of a noised released Gram (post-processing —
+        free under DP; see :func:`~.dp.psd_project`). A no-op when no
+        noise entered (ε=∞ stays bit-identical to the clipped
+        baseline) and for non-Gram stats."""
+        noisy = force or (self.policy.dp and (self._sigma or 0.0) > 0.0)
+        if noisy and isinstance(stats, GramStats):
+            return _dp.psd_project(stats)
+        return stats
+
+    # ------------------------------------------------------ calibration
+    def sigma(self, stats) -> float:
+        """The calibrated Gaussian scale for one release (cached).
+
+        ε=∞ short-circuits to 0 *before* the sensitivity bound: a
+        clip-only run adds no noise, so it must not fail on wires with
+        no analytic sensitivity (e.g. clip-only on the svd wire).
+        """
+        if self._sigma is None:
+            if math.isinf(self.policy.epsilon):
+                self._sigma = 0.0
+            else:
+                self._sens = self._sensitivity(stats)
+                self._sigma = _dp.calibrate_sigma(
+                    self.policy.epsilon, self.policy.delta, self._sens)
+        return self._sigma
+
+    def _sensitivity(self, stats) -> float:
+        if self.policy.sensitivity is not None:
+            return self.policy.sensitivity
+        if isinstance(stats, GramStats):
+            wire = self.base_wire
+            return _dp.sensitivity(
+                int(np.shape(stats.m_vec)[-1]), self.policy.clip,
+                act=wire.act,
+                add_bias=bool(getattr(wire, "add_bias", True)))
+        raise ValueError(
+            "no analytic sensitivity for stats of type "
+            f"{type(stats).__name__}; set PrivacyPolicy.sensitivity")
+
+    @staticmethod
+    def _noise(stats, sigma: float, key):
+        if isinstance(stats, GramStats):
+            return _dp.noise_stats(stats, sigma, key)
+        return _dp.noise_leaves_like(stats, sigma, key)
+
+    # --------------------------------------------------------- summary
+    def summary(self) -> dict:
+        out = {"mode": self.policy.mode, "clip": self.policy.clip,
+               "epsilon": self.policy.epsilon, "delta": self.policy.delta,
+               "releases": self.accountant.releases,
+               "eps_spent": self.accountant.eps_spent,
+               "delta_spent": self.accountant.delta_spent,
+               "sigma": self._sigma, "sensitivity": self._sens}
+        if self.policy.dp and self.policy.secagg:
+            out["noise_share_basis"] = self.cohort or self.n_clients
+        if self.masked and self.session._treedef is not None:
+            out["upload_bytes"] = self.session.upload_bytes
+            out["mod_bits"] = self.session.mod_bits
+        return out

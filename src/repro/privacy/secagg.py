@@ -1,0 +1,419 @@
+"""Bonawitz-style secure aggregation over the exact dyadic encoding.
+
+The coordinator in every transport so far reads each client's raw
+sufficient statistics — the one thing the paper's "privacy by design"
+pillar says it must not need. This module masks uploads so that any
+*individual* publication is a uniformly random ring element, while the
+*sum* over the participant set is exactly the unmasked aggregate.
+
+Why it can be bit-exact here when float secagg never is: the ledger
+(PR 4) already encodes statistics as exact dyadic integers — every
+finite float is ``p·2^-1074``, so scaling by ``2^1074`` makes it a
+Python integer and integer addition is associative, commutative and
+lossless. We work in the ring ``Z_{2^mod_bits}`` over that encoding:
+
+* client ``i`` uploads ``enc(stats_i) + Σ_{j>i} M_ij − Σ_{j<i} M_ji
+  (mod 2^mod_bits)``, where ``M_ij`` is a per-pair one-time pad derived
+  deterministically from the session key via ``jax.random.fold_in``
+  (standing in for the pairwise Diffie–Hellman agreement of Bonawitz
+  et al., CCS 2017 — both endpoints of a pair, and a recovery quorum,
+  can re-derive the pad),
+* the pads are uniform on the ring, so a single upload is information-
+  theoretically masked (one-time pad),
+* summing the uploads of any client set ``S`` cancels every pad whose
+  *both* endpoints lie in ``S``; pads crossing the boundary of ``S``
+  are re-derived by the coordinator (the dropout-recovery step) and
+  subtracted, leaving exactly ``Σ_{i∈S} enc(stats_i)``,
+* that integer sum, rounded once back to the wire dtype, is **bit
+  identical** to :class:`~..core.ledger.ExactAccumulator` folding the
+  same unmasked statistics — the property every secagg test pins.
+
+Ring elements are stored as little-endian base-``2^32`` *limb* arrays
+(``int64`` words, lazily carried): encoding a ``(…,)`` float leaf gives
+a ``(…, mod_bits/32)`` limb array, ring add/subtract are vectorized
+numpy adds, and carries only propagate when a magnitude check says the
+int64 headroom is running out. Python big-int work happens once per
+*element per aggregate* (decode), never per client.
+
+``mod_bits`` is sized so the true aggregate can never wrap: the largest
+finite value of the wire dtype scaled by ``2^1074``, plus 65 bits of
+headroom for up to ``2^63`` summands and the sign.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, FrozenSet, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ledger import _SHIFT, _UNIT
+
+_LIMB_BITS = 32
+# normalize (propagate carries) once any limb's magnitude crosses this —
+# far below the int64 ceiling, so a merge can always add one more upload
+_CARRY_THRESHOLD = np.int64(1) << 56
+
+# precompute every client's summed pad once per session when the cache
+# fits; beyond this the session falls back to on-demand per-client pads
+_PAD_CACHE_BYTES = 256 << 20
+
+
+def default_mod_bits(dtype) -> int:
+    """Ring width for a wire dtype: max-float exponent + dyadic shift
+    + 65 bits of headroom (2^63 summands, sign, slack), rounded up to a
+    whole number of 64-bit words."""
+    maxexp = np.finfo(np.dtype(dtype)).maxexp
+    bits = maxexp + _SHIFT + 65
+    return -(-bits // 64) * 64
+
+
+@functools.partial(jax.jit, static_argnames=("n_elems", "words"))
+def _pair_pads(key, lo, hi, n_elems, words):
+    """Per-pair PRF pads: ``(n_pairs, n_elems, words)`` uint32.
+
+    ``fold_in(fold_in(key, lo), hi)`` is the shared per-pair seed — in
+    a real deployment the pair agrees on it via key exchange; here the
+    session key stands in for that agreement, and the coordinator's
+    dropout recovery re-derives exactly these bits.
+    """
+    def one(l, h):
+        k = jax.random.fold_in(jax.random.fold_in(key, l), h)
+        return jax.random.bits(k, (n_elems, words), jnp.uint32)
+
+    return jax.vmap(one)(lo, hi)
+
+
+def _pow2_ceil(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedStats:
+    """One masked publication (or a ring-sum of several).
+
+    ``limbs`` — one ``(…, words)`` int64 limb array per stats leaf, in
+    the template's tree order; ``ids`` — the client ids whose uploads
+    are folded into this element (the coordinator needs the *set*, not
+    the order: ring addition is order-independent).
+    """
+    limbs: Tuple[np.ndarray, ...]
+    ids: FrozenSet[int]
+
+    def __post_init__(self):
+        object.__setattr__(self, "ids", frozenset(self.ids))
+
+
+class SecAggSession:
+    """Pairwise-mask bookkeeping for one federation of ``n_clients``.
+
+    The mask universe (which pairs exist) is fixed at construction —
+    scenarios then select any participant subset and the boundary pads
+    are recovered at unmask time. The stats *template* (leaf shapes,
+    dtypes, tree structure) binds on the first encode and every later
+    upload must match it.
+    """
+
+    def __init__(self, n_clients: int, *, seed: int = 0,
+                 dtype: Any = jnp.float32,
+                 mod_bits: Optional[int] = None):
+        if n_clients < 1:
+            raise ValueError("secagg session needs at least one client")
+        self.n_clients = int(n_clients)
+        self.seed = int(seed)
+        self.mod_bits = int(mod_bits or default_mod_bits(dtype))
+        if self.mod_bits % _LIMB_BITS:
+            raise ValueError("mod_bits must be a multiple of 32")
+        self.words = self.mod_bits // _LIMB_BITS
+        self._key = jax.random.key(self.seed)
+        self._mod = 1 << self.mod_bits
+        self._half = 1 << (self.mod_bits - 1)
+        # template (bound on first encode)
+        self._treedef = None
+        self._shapes: List[Tuple[int, ...]] = []
+        self._dtypes: List[Any] = []
+        self._sizes: List[int] = []
+        self.n_elems = 0
+        # per-client summed pads ((P, E, words) int64 when cached,
+        # False when the cache would blow the memory budget)
+        self._pad_sums: Any = None
+
+    # ------------------------------------------------------- template
+    def _bind(self, stats) -> List[np.ndarray]:
+        leaves, treedef = jax.tree_util.tree_flatten(stats)
+        arrs = [np.asarray(jax.device_get(lf), np.float64)
+                for lf in leaves]
+        if self._treedef is None:
+            self._treedef = treedef
+            self._shapes = [a.shape for a in arrs]
+            self._dtypes = [jnp.asarray(lf).dtype for lf in leaves]
+            self._sizes = [a.size for a in arrs]
+            self.n_elems = sum(self._sizes)
+        elif treedef != self._treedef or \
+                [a.shape for a in arrs] != self._shapes:
+            raise ValueError("stats do not match the session template "
+                             "(secagg needs a homogeneous federation)")
+        return arrs
+
+    @property
+    def upload_bytes(self) -> int:
+        """Wire size of one masked upload: every element widens from
+        the dtype's itemsize to a full ring element."""
+        if self._treedef is None:
+            raise ValueError("no upload yet: template unbound")
+        return self.n_elems * self.mod_bits // 8
+
+    # ------------------------------------------------- encode / decode
+    def _encode_leaves(self, arrs: Sequence[np.ndarray]
+                       ) -> Tuple[np.ndarray, ...]:
+        """Exact dyadic-integer limbs of float leaves, vectorized.
+
+        ``frexp`` splits each float64 into an exact 53-bit mantissa and
+        a bit position in the ring (``e − 53 + 1074``); the mantissa's
+        two 32-bit halves scatter into at most three adjacent limbs.
+        Negative values negate the limbs — the lazy-carry int64
+        representation absorbs that, and decode's final ``mod`` brings
+        it back onto the ring. Bit-for-bit the same integers as
+        ``v.as_integer_ratio()`` scaled by ``2^1074`` (property-tested
+        against ExactAccumulator), with no per-element Python big-int
+        work on the upload path.
+        """
+        out = []
+        for a in arrs:
+            if not np.all(np.isfinite(a)):
+                raise ValueError(
+                    "non-finite statistic cannot be masked")
+            flat = a.ravel()
+            m, e = np.frexp(flat)
+            sign = np.sign(m).astype(np.int64)
+            mant = np.rint(np.abs(m) * (1 << 53)).astype(np.int64)
+            shift = e.astype(np.int64) - 53 + _SHIFT
+            # float64 subnormals land at shift < 0; their mantissae
+            # carry ≥ −shift trailing zeros (the encoding is an exact
+            # integer), so the right shift is lossless
+            neg = np.minimum(shift, 0)
+            mant >>= -neg
+            shift -= neg
+            word, r = shift // _LIMB_BITS, shift % _LIMB_BITS
+            lo = (mant & 0xFFFFFFFF) << r           # ≤ 63 bits
+            hi = (mant >> 32) << r
+            limbs = np.zeros((flat.size, self.words), np.int64)
+            rows = np.arange(flat.size)
+            np.add.at(limbs, (rows, word), lo & 0xFFFFFFFF)
+            np.add.at(limbs, (rows, word + 1),
+                      (lo >> 32) + (hi & 0xFFFFFFFF))
+            np.add.at(limbs, (rows, word + 2), hi >> 32)
+            limbs *= sign[:, None]
+            out.append(limbs.reshape(a.shape + (self.words,)))
+        return tuple(out)
+
+    def encode(self, stats, cid: Optional[int] = None) -> MaskedStats:
+        """Exact ring image of ``stats`` — WITHOUT pads (the unmasked
+        reference the bit-exactness tests aggregate against)."""
+        limbs = self._encode_leaves(self._bind(stats))
+        ids = frozenset() if cid is None else frozenset((cid,))
+        return MaskedStats(limbs=limbs, ids=ids)
+
+    def decode(self, masked: MaskedStats):
+        """Round the ring element back to the template's dtypes.
+
+        Mirrors ``ExactAccumulator.snapshot`` operation for operation
+        (big-int → float64 true division → dtype cast), so a decoded
+        exact sum bit-equals the accumulator's snapshot of the same
+        contributions.
+        """
+        if self._treedef is None:
+            raise ValueError("no upload yet: template unbound")
+        leaves = []
+        for limb_arr, shape, dt in zip(masked.limbs, self._shapes,
+                                       self._dtypes):
+            flat = self._carry(limb_arr.reshape(-1, self.words))
+            # after carry propagation every limb is a clean base-2^32
+            # digit, so each row's ring value assembles in one C-speed
+            # from_bytes instead of `words` Python big-int shifts
+            rows = np.ascontiguousarray(flat.astype("<u4")).tobytes()
+            stride = self.words * 4
+            vals = []
+            for i in range(flat.shape[0]):
+                v = int.from_bytes(rows[i * stride:(i + 1) * stride],
+                                   "little")
+                if v >= self._half:
+                    v -= self._mod
+                vals.append(v / _UNIT)
+            leaves.append(jnp.asarray(
+                np.asarray(vals, np.float64).reshape(shape), dt))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # --------------------------------------------------------- masking
+    def _pad_sum(self, pairs: Sequence[Tuple[int, int, int]]
+                 ) -> Optional[np.ndarray]:
+        """Signed sum of per-pair pads → ``(n_elems, words)`` int64.
+
+        ``pairs`` is ``(lo, hi, sign)`` with ``lo < hi``; the pair list
+        is padded to a power of two (sign 0) so the jitted PRF keeps a
+        bounded set of compiled shapes.
+        """
+        if not pairs or self.n_elems == 0:
+            return None
+        n = _pow2_ceil(len(pairs))
+        lo = np.zeros(n, np.uint32)
+        hi = np.zeros(n, np.uint32)
+        sg = np.zeros(n, np.int64)
+        for r, (l, h, s) in enumerate(pairs):
+            lo[r], hi[r], sg[r] = l, h, s
+        bits = np.asarray(_pair_pads(self._key, jnp.asarray(lo),
+                                     jnp.asarray(hi), self.n_elems,
+                                     self.words)).astype(np.int64)
+        return np.einsum("p,pnw->nw", sg, bits)
+
+    def _client_pairs(self, cid: int) -> List[Tuple[int, int, int]]:
+        if not 0 <= cid < self.n_clients:
+            raise ValueError(f"client {cid} outside the session "
+                             f"universe 0..{self.n_clients - 1}")
+        return [(min(cid, j), max(cid, j), 1 if cid < j else -1)
+                for j in range(self.n_clients) if j != cid]
+
+    def _apply_pad(self, limbs: Tuple[np.ndarray, ...],
+                   pad: Optional[np.ndarray], sign: int
+                   ) -> Tuple[np.ndarray, ...]:
+        if pad is None:
+            return limbs
+        out, off = [], 0
+        for arr, size in zip(limbs, self._sizes):
+            chunk = pad[off:off + size].reshape(arr.shape)
+            out.append(arr + sign * chunk)
+            off += size
+        return tuple(out)
+
+    def _ensure_pad_sums(self) -> None:
+        """Batch-derive every client's summed pad, one PRF pass per
+        unique pair (each pad would otherwise be derived twice — once
+        per endpoint). Cached for the session: pads are deterministic
+        per (session key, pair), so every upload of a client reuses
+        its sum. Falls back to on-demand per-client derivation when
+        the (P, E, words) cache would exceed the memory budget."""
+        if self._pad_sums is not None:
+            return
+        P, E, W = self.n_clients, self.n_elems, self.words
+        if P < 2 or E == 0 or P * E * W * 8 > _PAD_CACHE_BYTES:
+            self._pad_sums = False
+            return
+        sums = np.zeros((P, E, W), np.int64)
+        pairs = [(lo, hi) for lo in range(P)
+                 for hi in range(lo + 1, P)]
+        chunk_size = 512
+        for c0 in range(0, len(pairs), chunk_size):
+            chunk = pairs[c0:c0 + chunk_size]
+            n = _pow2_ceil(len(chunk))
+            lo = np.zeros(n, np.uint32)
+            hi = np.zeros(n, np.uint32)
+            for r, (l, h) in enumerate(chunk):
+                lo[r], hi[r] = l, h
+            bits = np.asarray(_pair_pads(
+                self._key, jnp.asarray(lo), jnp.asarray(hi), E, W)
+            ).astype(np.int64)
+            for r, (l, h) in enumerate(chunk):
+                sums[l] += bits[r]       # lo endpoint adds the pad,
+                sums[h] -= bits[r]       # hi subtracts — they cancel
+        self._pad_sums = sums
+
+    def mask_upload(self, cid: int, stats) -> MaskedStats:
+        """Client ``cid``'s publication: exact encoding + its pads.
+
+        Uniformly masked on the ring (one-time pad) as long as at least
+        one pair partner's pad stays secret from the coordinator.
+        """
+        enc = self.encode(stats, cid)
+        if not 0 <= cid < self.n_clients:
+            raise ValueError(f"client {cid} outside the session "
+                             f"universe 0..{self.n_clients - 1}")
+        self._ensure_pad_sums()
+        pad = self._pad_sums[cid] \
+            if isinstance(self._pad_sums, np.ndarray) \
+            else self._pad_sum(self._client_pairs(cid))
+        return MaskedStats(limbs=self._apply_pad(enc.limbs, pad, 1),
+                           ids=enc.ids)
+
+    def recover_residual(self, ids: FrozenSet[int]
+                         ) -> Optional[np.ndarray]:
+        """Dropout recovery: the pad residue left in a sum over ``ids``.
+
+        Pads internal to ``ids`` cancelled; each pair with exactly one
+        endpoint inside leaves ``±M``. The coordinator re-derives those
+        pairs' pads (in Bonawitz et al. this is the survivors revealing
+        the departed clients' key shares) and returns their signed sum.
+        """
+        inside = sorted(ids)
+        outside = [j for j in range(self.n_clients) if j not in ids]
+        pairs = []
+        for i in inside:
+            for j in outside:
+                # residual carries the *inside* endpoint's sign
+                pairs.append((min(i, j), max(i, j),
+                              1 if i < j else -1))
+        return self._pad_sum(pairs)
+
+    def unmask(self, masked: MaskedStats):
+        """Aggregate → statistics: strip boundary pads, decode once.
+
+        Never call on a single upload you intend to keep private — the
+        whole point is that only *sums* are ever decoded.
+        """
+        if not masked.ids:
+            raise ValueError("cannot unmask an empty aggregate")
+        residual = self.recover_residual(masked.ids)
+        limbs = self._apply_pad(masked.limbs, residual, -1)
+        return self.decode(MaskedStats(limbs=limbs, ids=masked.ids))
+
+    # ------------------------------------------------------ ring algebra
+    def merge_signed(self, a: MaskedStats, b: MaskedStats,
+                     sign: int = 1) -> MaskedStats:
+        """Exact ring add/subtract; id sets stay consistent.
+
+        ``sign=+1`` folds a disjoint upload in; ``sign=-1`` is the
+        ledger's downdate (``b``'s clients must all be in ``a``). Both
+        are exact — integer limb arithmetic never rounds — so leave/
+        revise churn keeps bit-identical unlearning under masking.
+        """
+        if sign not in (1, -1):
+            raise ValueError("sign must be +1 or -1")
+        if sign > 0:
+            if a.ids & b.ids:
+                raise ValueError(
+                    f"masked merge of overlapping client sets "
+                    f"{sorted(a.ids & b.ids)}: each client uploads once")
+            ids = a.ids | b.ids
+        else:
+            if not b.ids <= a.ids:
+                raise ValueError(
+                    f"masked subtract of clients {sorted(b.ids - a.ids)} "
+                    "that are not in the aggregate")
+            ids = a.ids - b.ids
+        limbs = tuple(self._maybe_carry(x + sign * y)
+                      for x, y in zip(a.limbs, b.limbs))
+        return MaskedStats(limbs=limbs, ids=ids)
+
+    def _carry(self, flat: np.ndarray) -> np.ndarray:
+        """Full carry propagation: any lazy int64 limbs → clean
+        base-2^32 digits in ``[0, 2^32)``. The top limb's carry wraps
+        off the ring, so the value mod ``2^mod_bits`` is unchanged."""
+        flat = flat.copy()
+        carry = np.zeros(flat.shape[0], np.int64)
+        for k in range(self.words):
+            v = flat[:, k] + carry
+            carry = v >> _LIMB_BITS
+            flat[:, k] = v - (carry << _LIMB_BITS)
+        return flat
+
+    def _maybe_carry(self, arr: np.ndarray) -> np.ndarray:
+        """Normalize only when int64 headroom runs low (cheap check on
+        the hot merge path; normalization is invisible to decode)."""
+        if np.abs(arr).max(initial=0) < _CARRY_THRESHOLD:
+            return arr
+        return self._carry(arr.reshape(-1, self.words)) \
+            .reshape(arr.shape)
