@@ -12,12 +12,19 @@ assumed:
   those bytes via the J/byte model (``energy.uplink_joules``),
 * **accuracy-vs-ε curve** — ``dp`` runs at ε ∈ {0.5, 1, 4, ∞} plus the
   unclipped non-private baseline; ε=∞ is clip-only (σ=0) and its ``W``
-  bit-matches the clipped baseline (asserted in tests/test_privacy.py).
+  bit-matches the clipped baseline (asserted in tests/test_privacy.py),
+* **privacy × speed rows** — secagg on the FAST gears: the fused
+  donated-buffer round (stats → noise-share → ring-encode → mask →
+  merge as one jitted program per bucket) and the mesh collective
+  (on-device masking, int64 limb psum), each against its unprivate
+  twin, so the cost of masking a fast round is priced where the paper's
+  efficiency claims live, not only on the loop transport.
 
-Results merge into ``BENCH_fedround.json`` under the ``"privacy"`` key
-(preserving the fedround/ledger sections). ``scripts/ci_smoke.sh``
-asserts the section is well-formed and that secagg Σ CPU stays within
-2× of the baseline round.
+Results merge into ``BENCH_fedround.json`` under the ``"privacy"`` and
+``"privacy_fused"`` keys (preserving the fedround/ledger sections).
+``scripts/ci_smoke.sh`` asserts both sections are well-formed, that
+secagg Σ CPU stays within 2× of the baseline round, and that
+fused+secagg Σ CPU stays within 2× of the unprivate fused round.
 
 ``PYTHONPATH=src python -m benchmarks.privacy_bench [--quick] [--json PATH]``
 """
@@ -63,13 +70,14 @@ def _accuracy(W, Xte, yte) -> float:
     return float((np.asarray(pred) == yte).mean())
 
 
-def _round(policy, pX, pD):
+def _round(policy, pX, pD, **engine_kw):
     """One warmed round: the first run compiles this policy's programs
     (pad PRF, noise, projection — jit caches are global, so without
     the throwaway run the first policy measured would eat every
     compile); the second is the steady-state round the overhead bars
     compare."""
-    engine = FederationEngine(wire="gram", privacy=policy, warmup=True)
+    engine = FederationEngine(wire="gram", privacy=policy, warmup=True,
+                              **engine_kw)
     engine.run(pX, pD)
     t0 = time.perf_counter()
     rep = engine.run(pX, pD)
@@ -129,6 +137,45 @@ def run(quick: bool = False, json_path: str | None = None,
         print(f"[privacy] dp eps={eps}: acc {curve[str(eps)]:.4f} "
               f"(sigma {rep.privacy['sigma']})")
 
+    # ---- privacy × speed: secagg on the fast gears vs their
+    # unprivate twins (same data, same warmed-second-round protocol)
+    gears = [
+        ("fused", dict(fused=True)),
+        ("mesh", dict(transport="mesh")),
+    ]
+    fast_rows, fast_overhead = [], {}
+    for gear, kw in gears:
+        cpu_pair = {}
+        for name, policy in (("baseline", PrivacyPolicy()),
+                             ("secagg", PrivacyPolicy(mode="secagg",
+                                                      seed=seed))):
+            rep, wall = _round(policy, pX, pD, **kw)
+            cpu_pair[name] = rep.cpu_time
+            priv = rep.privacy or {}
+            fast_rows.append({
+                "bench": "privacy_fused", "wire": "gram", "P": P,
+                "gear": gear, "mode": name,
+                "wall_s": round(wall, 6),
+                "train_time": round(rep.train_time, 6),
+                "cpu_time": round(rep.cpu_time, 6),
+                "wh": rep.wh,
+                "wire_bytes": rep.wire_bytes,
+                "uplink_j": uplink_joules(rep.wire_bytes),
+                "dispatches": rep.dispatches,
+                "accuracy": _accuracy(rep.W, Xte, yte),
+                "upload_bytes_per_client": priv.get(
+                    "upload_bytes", rep.wire_bytes // max(P, 1)),
+            })
+            print(f"[privacy] P={P} {gear}+{name}: "
+                  f"ΣCPU {rep.cpu_time:.4f}s, "
+                  f"{rep.dispatches} dispatch(es), "
+                  f"{rep.wire_bytes} B up, "
+                  f"acc {fast_rows[-1]['accuracy']:.4f}")
+        fast_overhead[gear] = (cpu_pair["secagg"] / cpu_pair["baseline"]
+                               if cpu_pair["baseline"] else 0.0)
+        print(f"[privacy] {gear}+secagg: "
+              f"ΣCPU = {fast_overhead[gear]:.2f}× unprivate {gear}")
+
     path = json_path or JSON_DEFAULT
     payload = {"bench": "fedround", "rows": []}
     if os.path.exists(path):
@@ -141,9 +188,13 @@ def run(quick: bool = False, json_path: str | None = None,
                           "clip": CLIP, "rows": rows,
                           "cpu_overhead": overhead,
                           "accuracy_vs_eps": curve}
+    payload["privacy_fused"] = {"P": P, "samples_per_client": n_per,
+                                "rows": fast_rows,
+                                "cpu_overhead": fast_overhead}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
-    print(f"[privacy] wrote {path} (privacy section, {len(rows)} rows)")
+    print(f"[privacy] wrote {path} (privacy section, {len(rows)} rows; "
+          f"privacy_fused section, {len(fast_rows)} rows)")
     return rows, overhead, curve
 
 

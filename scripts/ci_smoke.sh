@@ -36,6 +36,10 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
   --wire gram --transport local --privacy secagg
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
   --wire gram --transport local --privacy dp --epsilon 1.0 --clip 4.0
+# privacy × speed: the masked FUSED round (stats → encode → mask →
+# ring-merge as one jitted program per bucket) through the launcher
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
+  --wire gram --transport local --privacy secagg --fused
 
 # the event-driven ledger path end-to-end: timeline rounds with a
 # checkpoint save, then a restore-and-continue run (bit-exact state)
@@ -92,9 +96,25 @@ curve = priv["accuracy_vs_eps"]
 assert {"0.5", "1.0", "4.0", "inf", "baseline"} <= set(curve), curve
 frac = priv["cpu_overhead"]["secagg"]
 assert frac <= 2.0, f"secagg SigmaCPU {frac:.2f}x > 2x baseline"
+# ISSUE 6 acceptance: masking the FAST gears is priced too — the fused
+# (one-program-per-bucket) and mesh (limb-psum) secagg rounds each stay
+# within 2x the SigmaCPU of their unprivate twin
+pf = d["privacy_fused"]
+need_f = {"gear", "mode", "cpu_time", "wire_bytes", "uplink_j",
+          "wall_s", "dispatches", "accuracy"}
+for r in pf["rows"]:
+    missing = need_f - set(r)
+    assert not missing, f"privacy_fused row missing {missing}"
+gears = {(r["gear"], r["mode"]) for r in pf["rows"]}
+assert {("fused", "baseline"), ("fused", "secagg"),
+        ("mesh", "baseline"), ("mesh", "secagg")} <= gears, gears
+fused_frac = pf["cpu_overhead"]["fused"]
+assert fused_frac <= 2.0, \
+    f"fused+secagg SigmaCPU {fused_frac:.2f}x > 2x unprivate fused"
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"ledger delta fracs {led['delta_cpu_frac']}, "
-      f"secagg CPU {frac:.2f}x, acc@eps {curve})")
+      f"secagg CPU {frac:.2f}x, fused+secagg {fused_frac:.2f}x, "
+      f"acc@eps {curve})")
 PY
 
 echo "ci_smoke: OK"

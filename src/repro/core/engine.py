@@ -51,9 +51,15 @@ exact-aggregation solve), ``privacy="dp"`` clips client rows and
 perturbs the aggregate once per release, ``"secagg+dp"`` distributes
 the noise across clients under the masks. The client-side steps (clip,
 noise share, mask) are timed into ``client_times`` so privacy overhead
-shows up in the §4.1 metrics; the mesh transport (on-device float
-psum) and the fused path (per-client statistics never materialize)
-reject privacy policies loudly.
+shows up in the §4.1 metrics. Privacy composes with EVERY transport
+and gear: the fused path runs each bucket's masked round as one jitted
+stats → noise-share → encode → mask → ring-merge program
+(``privacy/limbs.py`` — a uniform masked round stays one client-phase
+dispatch), and the mesh transport masks on-device before its
+collective, psumming int64 limb arrays whose interior pads cancel
+exactly (``MaskedWire.mesh_reduce``). The only closed cells of the
+wire × transport × privacy matrix are svd × secagg (the Iwen–Ong
+merge is not additive — ``PrivacyCellUnsupported``, DESIGN.md §10).
 
 Every run returns a :class:`RoundReport` with the paper's §4.1 metrics —
 train time (slowest client + coordinator), Σ CPU, Wh from process-CPU
@@ -206,17 +212,18 @@ class FederationEngine:
 
     # ------------------------------------------------------- privacy
     def _begin_privacy(self, P: int):
-        """Activate the policy for a run over a ``P``-client pool."""
+        """Activate the policy for a run over a ``P``-client pool (on
+        the mesh transport the pool is the device axis — the devices
+        are the uploading clients). A wire × privacy combination the
+        matrix rules out raises the typed
+        :class:`~..privacy.policy.PrivacyCellUnsupported` here, with
+        the cell named after this engine's transport."""
         if not self.privacy.active:
             self._priv = None
             return None
-        if self.transport == "mesh":
-            raise ValueError(
-                "privacy policies need per-client uploads held "
-                "in-process; the mesh transport reduces on-device "
-                "(float psum) — use transport='local'|'stream'")
         if P not in self._priv_runs:
-            self._priv_runs[P] = self.privacy.begin(P, self.wire)
+            self._priv_runs[P] = self.privacy.begin(
+                P, self.wire, transport=self.transport)
         self._priv = self._priv_runs[P]
         return self._priv
 
@@ -247,21 +254,19 @@ class FederationEngine:
         if len(parts_X) != len(parts_d):
             raise ValueError("parts_X and parts_d length mismatch")
         parts_d = [as_2d(d) for d in parts_d]
-        priv = self._begin_privacy(len(parts_X))
-        if priv is not None and self.fused:
-            raise ValueError(
-                "the fused round path never materializes "
-                "per-client statistics, so they cannot be masked "
-                "or noised; use batch_clients=True (still one "
-                "dispatch per bucket) or drop the privacy policy")
+        if self.transport != "mesh":
+            # the mesh path's uploading units are the devices on the
+            # axis, not the data partitions — run_mesh_arrays begins
+            # its privacy run at the axis size
+            self._begin_privacy(len(parts_X))
         with EnergyMeter() as em:
             if self.transport == "mesh":
                 report = self._run_mesh(parts_X, parts_d)
             else:
                 report = self._run_inprocess(parts_X, parts_d)
         report.cpu_seconds = em.cpu_seconds
-        if priv is not None:
-            report.privacy = priv.summary()
+        if self._priv is not None:
+            report.privacy = self._priv.summary()
         return report
 
     def fit(self, parts_X: Sequence, parts_d: Sequence) -> jnp.ndarray:
@@ -680,18 +685,62 @@ class FederationEngine:
                 prog, donate_argnums=donate)
         return self._fused_cache[with_solve]
 
+    def _masked_fused_fn(self, share: float):
+        """One bucket's masked round as ONE jitted program: fleet stats
+        → (per-client σ/√cohort noise shares, secagg+dp) → exact limb
+        encode → pairwise pads (lazy ring add) → ring sum over the
+        client axis → carry-normalize. Per-client statistics exist only
+        as traced intermediates; the program's sole output is the
+        bucket's masked ring aggregate, which the host wraps via
+        ``SecAggSession.from_flat``. Runs under x64 (the limb ops are
+        int64); the f32 statistics themselves are unchanged by x64 —
+        JAX's weak typing keeps explicitly-dtyped programs bit-stable
+        (pinned by the conformance suite).
+        """
+        key = ("masked", share)
+        if key not in self._fused_cache:
+            from ..privacy import limbs as _limbs
+            wire, priv = self.wire, self._priv
+            words = priv.session.words
+            noisy = priv.policy.dp
+
+            def prog(Xs, Ds, ns, pads, keys):
+                st = wire.fleet_stats(Xs, Ds, ns)
+                if noisy:
+                    st = priv.noise_shares_stacked(st, keys, share)
+                enc = _limbs.encode_tree(wire.secagg_encode(st), words,
+                                         stacked=True)
+                return _limbs.carry_limbs(
+                    _limbs.sum_limbs(_limbs.add_limbs(enc, pads)))
+
+            donate = (0, 1) if jax.default_backend() != "cpu" else ()
+            self._fused_cache[key] = jax.jit(prog, donate_argnums=donate)
+        return self._fused_cache[key]
+
     def _run_fused(self, parts_X, parts_d, roles) -> RoundReport:
+        priv = self._priv
         time_by = {i: 0.0 for i in roles.participants}
+        if priv is not None and priv.policy.dp:
+            # per-row clipping is client-side work, timed per client as
+            # on the loop path; the fused programs then consume the
+            # clipped shards
+            parts_X = list(parts_X)
+            for i in roles.participants:
+                t0 = time.perf_counter()
+                parts_X[i] = priv.clip(parts_X[i])
+                time_by[i] = time.perf_counter() - t0
         on_buckets = [b for b in self._buckets(parts_X, roles.on_time)
                       if b[0] > 0]
         late_buckets = [b for b in self._buckets(parts_X, roles.late)
                         if b[0] > 0]
         # empty shards contribute exactly-zero statistics: they never
-        # enter a fused program, only the (analytic) upload accounting
+        # enter a fused program, only the (analytic) upload accounting —
+        # except under masking, where even a zero upload carries pads
+        # that must cancel in the aggregate (handled below)
         m_in = parts_X[0].shape[1] if len(parts_X) else 0
         c = parts_d[0].shape[1] if len(parts_d) else 1
         wire_bytes = sum(
-            self.wire.stats_bytes(int(parts_X[i].shape[0]), m_in, c)
+            self._cw().stats_bytes(int(parts_X[i].shape[0]), m_in, c)
             for i in roles.participants)
         dispatches = 0
 
@@ -710,10 +759,18 @@ class FederationEngine:
                               time.perf_counter() - t0)
             return out
 
+        if priv is not None and priv.masked:
+            return self._run_fused_masked(
+                parts_X, parts_d, roles, on_buckets, late_buckets,
+                time_by, wire_bytes)
+
         # a scenario with late joiners must produce W_first even if every
         # late shard is empty (late_buckets drops bound-0 shards), so the
-        # one-shot fusion keys on the roles, not the bucket list
-        one_shot = len(on_buckets) == 1 and not roles.late
+        # one-shot fusion keys on the roles, not the bucket list; an
+        # active dp policy releases host-side (noise + accounting), so
+        # the solve cannot fuse into the program
+        one_shot = len(on_buckets) == 1 and not roles.late \
+            and priv is None
         if one_shot:
             # the whole round — every client's pass, the merge, and the
             # solve — is one compiled dispatch
@@ -736,11 +793,12 @@ class FederationEngine:
                                                         parts_d[i])
                                   for i in roles.on_time])
             if roles.late:
-                W_first = self.wire.solve(agg, self.lam)
+                W_first = self.wire.solve(self._release(agg, salt=1),
+                                          self.lam)
                 jax.block_until_ready(W_first)
                 for st in late_aggs:
                     agg = self.wire.merge(agg, st)
-            W = self.wire.solve(agg, self.lam)
+            W = self.wire.solve(self._release(agg, salt=0), self.lam)
             jax.block_until_ready(W)
             coordinator_time = time.perf_counter() - t0
         return RoundReport(
@@ -751,7 +809,151 @@ class FederationEngine:
                           for i in roles.participants),
             W_first=W_first, dispatches=dispatches)
 
+    def _run_fused_masked(self, parts_X, parts_d, roles, on_buckets,
+                          late_buckets, time_by, wire_bytes
+                          ) -> RoundReport:
+        """The fused round under masking: one jitted masked program per
+        bucket (``_masked_fused_fn``), the ordinary MaskedWire
+        merge/solve tail on the per-bucket ring aggregates. A uniform
+        masked round (one bucket, no late joiners, no empty shards) is
+        ONE client-phase dispatch, exactly like the unprivate fused
+        path — ring addition is order-independent, so ``W`` bit-matches
+        the masked loop path.
+        """
+        from jax.experimental import enable_x64
+        priv, cw = self._priv, self._cw()
+        sess = priv.session
+        i0 = roles.participants[0] if roles.participants else 0
+        # bind the template + pad cache from a zero-row shard (shape
+        # bookkeeping, untimed — see PrivacyRun.prepare); zero-row
+        # local_stats is the same empty-shard path every transport uses
+        template = self.wire.local_stats(
+            np.asarray(parts_X[i0])[:0], np.asarray(parts_d[i0])[:0])
+        priv.prepare(template)
+        from ..privacy.limbs import check_fleet_headroom
+        check_fleet_headroom(len(roles.participants))
+        share = priv.share_sigma(template) if priv.policy.dp else 0.0
+        fn = self._masked_fused_fn(share)
+        dispatches = 0
+
+        def run_masked_bucket(idxs, bound):
+            nonlocal dispatches
+            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, idxs,
+                                            bound)
+            pads = sess.flat_pad_sums(idxs)
+            keys = priv.share_keys(idxs) if priv.policy.dp else \
+                np.zeros((len(idxs), 2), np.uint32)
+            with enable_x64():
+                if self.warmup:
+                    # fresh stack: the program may have donated buffers
+                    # (warmup reuses the same keys — its output is
+                    # discarded, never released)
+                    jax.block_until_ready(fn(
+                        *self._stack_bucket(parts_X, parts_d, idxs,
+                                            bound), pads, keys))
+                t0 = time.perf_counter()
+                out = fn(Xs, Ds, ns, pads, keys)
+                jax.block_until_ready(out)
+            dispatches += 1
+            self._share_times(time_by, idxs, ns,
+                              time.perf_counter() - t0)
+            return sess.from_flat(np.asarray(out),
+                                  frozenset(int(i) for i in idxs))
+
+        def mask_empties(idxs):
+            # empty shards still publish: their zero statistics carry
+            # pads (and noise shares) the aggregate needs to cancel —
+            # a real per-client dispatch, timed and counted
+            nonlocal dispatches
+            out = []
+            for i in idxs:
+                t0 = time.perf_counter()
+                st = self.wire.local_stats(parts_X[i], parts_d[i])
+                out.append(priv.client_encode(int(i), st))
+                time_by[i] = time_by.get(i, 0.0) + \
+                    (time.perf_counter() - t0)
+                dispatches += 1
+            return out
+
+        on_aggs = [run_masked_bucket(idxs, bound)
+                   for bound, idxs in on_buckets]
+        on_aggs += mask_empties(
+            [i for i in roles.on_time
+             if int(parts_X[i].shape[0]) == 0])
+        late_aggs = [run_masked_bucket(idxs, bound)
+                     for bound, idxs in late_buckets]
+        late_aggs += mask_empties(
+            [i for i in roles.late if int(parts_X[i].shape[0]) == 0])
+        t0 = time.perf_counter()
+        agg = cw.merge_many(on_aggs)
+        W_first = None
+        if roles.late:
+            W_first = cw.solve(self._release(agg, salt=1), self.lam)
+            jax.block_until_ready(W_first)
+            for st in late_aggs:
+                agg = cw.merge(agg, st)
+        W = cw.solve(self._release(agg, salt=0), self.lam)
+        jax.block_until_ready(W)
+        coordinator_time = time.perf_counter() - t0
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=coordinator_time, wire_bytes=wire_bytes,
+            roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=dispatches)
+
     # -------------------------------------------------------- mesh path
+    def _mesh_masked(self, mesh, wire, X, D, Pn):
+        """The masked collective: every device noise-shares (secagg+dp),
+        ring-encodes and pads its own statistics inside the shard, then
+        :meth:`MaskedWire.mesh_reduce` psums the limb arrays — interior
+        pads cancel on-device exactly as they do host-side, so the
+        replicated aggregate is the same ring element the loop path's
+        coordinator holds. The host wraps it (``from_flat``), unmasks
+        and solves. Runs under x64 for the int64 limb algebra; the f32
+        statistics are unchanged by it (weak typing, pinned by the
+        conformance suite)."""
+        from jax.experimental import enable_x64
+        from ..privacy import limbs as _limbs
+        from jax.sharding import PartitionSpec as P
+        from ..launch.mesh import masked_round_specs
+        priv, cw, axis, lam = self._priv, self._cw(), self.axis, self.lam
+        sess = priv.session
+        template = wire.local_stats(X[:0], D[:0])
+        priv.prepare(template)
+        _limbs.check_fleet_headroom(Pn)
+        share = priv.share_sigma(template) if priv.policy.dp else 0.0
+        dp = priv.policy.dp
+        pads = sess.flat_pad_sums(list(range(Pn)))
+        keys = priv.share_keys(range(Pn)) if dp else \
+            np.zeros((Pn, 2), np.uint32)
+
+        def shard_fn(Xs, Ds, pad, keyd):
+            st = wire.local_stats(Xs, Ds)
+            if dp:
+                st = priv._noise(st, share,
+                                 jax.random.wrap_key_data(keyd[0]))
+            return cw.mesh_reduce(cw.device_encode(st, pad[0]), axis)
+
+        in_specs, out_specs = masked_round_specs(self.axis)
+        fn = shard_map_compat(shard_fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
+        with enable_x64():
+            if self.warmup:
+                # untimed compile pass; it reuses this round's noise
+                # keys, which is safe — its output is discarded, never
+                # released, and the timed pass redraws nothing (the
+                # per-key Gaussian is deterministic)
+                jax.block_until_ready(fn(X, D, pads, keys))
+            t0 = time.perf_counter()
+            out = fn(X, D, pads, keys)
+            jax.block_until_ready(out)
+        agg = sess.from_flat(np.asarray(out), frozenset(range(Pn)))
+        W = cw.solve(self._release(agg, salt=0), lam)
+        jax.block_until_ready(W)
+        return W, time.perf_counter() - t0
+
     def _run_mesh(self, parts_X, parts_d) -> RoundReport:
         # One collective phase: dropout and partitioning apply (only the
         # participants' union enters the solve); late joiners are admitted
@@ -766,10 +968,28 @@ class FederationEngine:
 
     def run_mesh_arrays(self, X, D,
                         roles: Optional[ClientRoles] = None) -> RoundReport:
-        """Mesh round over already-concatenated data (one client/device)."""
+        """Mesh round over already-concatenated data (one client/device).
+
+        With an active privacy policy the devices on the axis are the
+        uploading clients (pool size = axis size): under masking each
+        device noise-shares (secagg+dp), ring-encodes and pads its own
+        statistics *before* the collective, so the psum only ever sees
+        ring elements whose interior pads cancel exactly — the decoded
+        ``W`` bit-matches the host loop's masked round. Central DP
+        reduces plaintext statistics on-device as usual and perturbs
+        the replicated aggregate once, host-side, at release.
+        """
         mesh = self.mesh or make_client_mesh(axis=self.axis)
         Pn = mesh.shape[self.axis]
         X, D = jnp.asarray(X), as_2d(D)
+        priv = self._begin_privacy(Pn)
+        if priv is not None:
+            priv.cohort = Pn
+            if priv.policy.dp:
+                # per-row clip before the bias column exists (the loop
+                # path clips raw client rows the same way); row-local,
+                # so clipping the concatenation is the per-device clip
+                X = priv.clip(X)
         n = int(X.shape[0])
         wire = self.wire
         if getattr(wire, "add_bias", None) is True and \
@@ -790,23 +1010,52 @@ class FederationEngine:
         X, D = pad_for_mesh(X, D, Pn, wire.act)
         lam, axis = self.lam, self.axis
 
-        def shard_fn(Xs, Ds):
-            st = wire.local_stats(Xs, Ds)
-            return wire.solve(wire.mesh_reduce(st, axis), lam)
-
         from jax.sharding import PartitionSpec as P
-        fn = shard_map_compat(shard_fn, mesh=mesh,
-                              in_specs=(P(self.axis, None),
-                                        P(self.axis, None)),
-                              out_specs=P(None, None))
-        if self.warmup:
-            # untimed compile pass at the real shapes, as on the other
-            # transports, so the timed collective is steady-state
-            jax.block_until_ready(fn(X, D))
-        t0 = time.perf_counter()
-        W = fn(X, D)
-        jax.block_until_ready(W)
-        coordinator_time = time.perf_counter() - t0
+        if priv is not None and priv.masked:
+            W, coordinator_time = self._mesh_masked(
+                mesh, wire, X, D, Pn)
+        elif priv is not None and priv.policy.dp:
+            # plaintext on-device reduce (noise is central, added once
+            # at release): the collective returns the replicated
+            # aggregate statistics; noise + accounting + solve happen
+            # host-side, inside the timed coordinator phase
+            template = wire.local_stats(X[:0], D[:0])
+            out_specs = jax.tree_util.tree_map(
+                lambda lf: P(*([None] * np.ndim(lf))), template)
+
+            def shard_fn(Xs, Ds):
+                return wire.mesh_reduce(wire.local_stats(Xs, Ds), axis)
+
+            fn = shard_map_compat(shard_fn, mesh=mesh,
+                                  in_specs=(P(self.axis, None),
+                                            P(self.axis, None)),
+                                  out_specs=out_specs)
+            if self.warmup:
+                jax.block_until_ready(fn(X, D))
+            t0 = time.perf_counter()
+            agg = fn(X, D)
+            jax.block_until_ready(agg)
+            W = wire.solve(self._release(agg, salt=0), lam)
+            jax.block_until_ready(W)
+            coordinator_time = time.perf_counter() - t0
+        else:
+            def shard_fn(Xs, Ds):
+                st = wire.local_stats(Xs, Ds)
+                return wire.solve(wire.mesh_reduce(st, axis), lam)
+
+            fn = shard_map_compat(shard_fn, mesh=mesh,
+                                  in_specs=(P(self.axis, None),
+                                            P(self.axis, None)),
+                                  out_specs=P(None, None))
+            if self.warmup:
+                # untimed compile pass at the real shapes, as on the
+                # other transports, so the timed collective is
+                # steady-state
+                jax.block_until_ready(fn(X, D))
+            t0 = time.perf_counter()
+            W = fn(X, D)
+            jax.block_until_ready(W)
+            coordinator_time = time.perf_counter() - t0
         if roles is None:
             roles = ClientRoles(on_time=tuple(range(Pn)), late=(),
                                 dropped=(), delays=(0.0,) * Pn)
@@ -818,10 +1067,14 @@ class FederationEngine:
         client_times = [0.0] * len(roles.participants)
         # on this transport the mesh devices are the uploading clients:
         # wire_bytes counts one upload per device at the true (unpadded)
-        # per-device sample count — pad rows are never sent anywhere
+        # per-device sample count — pad rows are never sent anywhere;
+        # under masking the coordinator wire prices the fixed-size ring
+        # upload instead of the plaintext statistics
         n_local = -(-n // Pn)
-        wire_bytes = Pn * wire.stats_bytes(n_local, X.shape[1],
-                                           D.shape[1])
+        bytes_wire = self._cw() if (priv is not None and priv.masked) \
+            else wire
+        wire_bytes = Pn * bytes_wire.stats_bytes(n_local, X.shape[1],
+                                                 D.shape[1])
         return RoundReport(W=W, client_times=client_times,
                            coordinator_time=coordinator_time,
                            wire_bytes=wire_bytes, roles=roles,

@@ -237,7 +237,7 @@ class FederationLedger:
                 "checkpoint: masked ring elements have no flat-npz "
                 "registry form (and restoring one would need the mask "
                 "session re-keyed); checkpoint an unmasked federation "
-                "or keep the masked ledger in memory")
+                "or keep the masked ledger in memory (DESIGN.md §10)")
         meta = {"wire": np.asarray(self.wire.name),
                 "act": np.asarray(self.wire.act),
                 "lam": np.float64(self.lam),

@@ -43,7 +43,8 @@ transport and scenario in ``core/engine.py`` composes with it unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Protocol, Sequence, runtime_checkable
+from typing import Any, List, Optional, Protocol, Sequence, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp

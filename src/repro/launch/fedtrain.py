@@ -78,7 +78,11 @@ def main():
                          "pairwise-masked uploads (gram wire, bit-exact "
                          "aggregate), dp = clip + one-shot Gaussian "
                          "output perturbation, secagg+dp = distributed "
-                         "noise under the masks")
+                         "noise under the masks; composes with every "
+                         "transport and with --fused (a uniform masked "
+                         "fused round is one dispatch) — the only "
+                         "refused combination is --wire svd with a "
+                         "secagg mode (DESIGN.md §10)")
     ap.add_argument("--epsilon", type=float, default=float("inf"),
                     help="DP budget per released model (inf = clip "
                          "only, no noise)")

@@ -27,3 +27,20 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     n = len(jax.devices())
     data = data or (n // model)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def masked_round_specs(axis: str):
+    """Partition specs for the masked (secagg) mesh round's collective.
+
+    Inputs, each sharded one-row-per-device along ``axis``: the
+    ``(Pₙ, n/Pₙ, m)`` sample shard, the matching target shard, the
+    device's ``(1, n_elems, words)`` summed pairwise pad, and its
+    noise-share key data (secagg+dp). Output: the ring-reduced
+    ``(n_elems, words)`` limb aggregate, replicated — each device masks
+    its own statistics before anything leaves it, so the psum only ever
+    sees ring elements (`core/engine.py` builds the shard_fn; the pads
+    come from ``SecAggSession.flat_pad_sums``).
+    """
+    from jax.sharding import PartitionSpec as P
+    return ((P(axis, None), P(axis, None), P(axis, None, None),
+             P(axis, None)), P(None, None))

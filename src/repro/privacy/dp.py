@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import activations as acts
-from ..core.solver import GramStats
+from ..core.solver import ClientStats, GramStats
 
 
 # ------------------------------------------------------------- clipping
@@ -214,6 +214,46 @@ def noise_stats(stats: GramStats, sigma: float, key) -> GramStats:
     M = jax.random.normal(kM, stats.m_vec.shape,
                           stats.m_vec.dtype) * sigma
     return GramStats(G=G + Zs, m_vec=stats.m_vec + M, n=stats.n)
+
+
+def noise_factor_stats(stats: ClientStats, sigma: float,
+                       key) -> ClientStats:
+    """One Gaussian perturbation of the svd wire's ``(U·S, m_vec)``.
+
+    The singular factors are not an additive release, but the model
+    they determine only depends on them through the Gram image
+    ``G = (U·S)(U·S)ᵀ`` (the solve's gain is a function of ``s²`` and
+    ``U`` — DESIGN.md §2), and *that* is a sum over samples with the
+    same joint ``(G, m_vec)`` sensitivity bound as the gram wire
+    (:func:`sensitivity`). So noise enters on the Gram image —
+    symmetric, AnalyzeGauss-style, exactly as :func:`noise_stats` —
+    and the factors are rebuilt by eigendecomposition with negative
+    eigenvalues clamped (the PSD projection is built in; rebuilding
+    factors from the released noisy Gram is post-processing and costs
+    no extra privacy). ``n`` is released exactly, as on the gram path.
+
+    σ = 0 returns the statistics untouched, keeping the ε=∞ clip-only
+    path bit-identical (the eigh round-trip is not bit-neutral).
+    """
+    if sigma < 0:
+        raise ValueError(f"sigma must be >= 0, got {sigma}")
+    if sigma == 0:
+        return stats
+    A = jnp.asarray(stats.US)                       # (k, m, r)
+    G = A @ jnp.swapaxes(A, -1, -2)
+    kG, kM = jax.random.split(jax.random.fold_in(key, 0))
+    Z = jax.random.normal(kG, G.shape, G.dtype) * sigma
+    iu = jnp.triu(jnp.ones(G.shape[-2:], bool))
+    Zs = jnp.where(iu, Z, jnp.swapaxes(Z, -1, -2))
+    M = jax.random.normal(kM, stats.m_vec.shape,
+                          stats.m_vec.dtype) * sigma
+    w, V = jnp.linalg.eigh(G + Zs)
+    w = jnp.maximum(w, 0.0)
+    # eigh orders ascending; the wire's factors follow SVD convention
+    # (descending), and the solve's gain 1/(s²+λ) is order-coupled to
+    # the columns of U, so flip both together
+    return ClientStats(U=V[..., ::-1], s=jnp.sqrt(w[..., ::-1]),
+                       m_vec=stats.m_vec + M, n=stats.n)
 
 
 def psd_project(stats: GramStats) -> GramStats:

@@ -23,6 +23,15 @@ overhead stays visible in every report and benchmark.
 A policy is stateless and reusable; :meth:`PrivacyPolicy.begin` mints
 the per-federation state (mask session, accountant, noise keys) as a
 :class:`PrivacyRun` — the engine creates one per client-pool size.
+
+Every {wire} × {transport} × {privacy} cell either runs or raises the
+one typed impossibility, :class:`PrivacyCellUnsupported`
+(:func:`support_matrix` is the source of truth; DESIGN.md §10 renders
+it). The masked ring algebra is jittable (:mod:`.limbs`):
+:meth:`MaskedWire.device_encode` masks inside a traced program and
+:meth:`MaskedWire.mesh_reduce` is the masked merge as a psum over limb
+arrays, which is how masking rides the engine's fused single-dispatch
+and mesh-collective fast paths.
 """
 from __future__ import annotations
 
@@ -33,12 +42,70 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from ..core.solver import GramStats
+from ..core.solver import ClientStats, GramStats
 from ..core.wire import _WireBase
 from . import dp as _dp
+from . import limbs as _limbs
 from .secagg import MaskedStats, SecAggSession
 
 MODES = ("none", "secagg", "dp", "secagg+dp")
+WIRE_NAMES = ("svd", "gram")
+TRANSPORT_NAMES = ("local", "mesh", "stream")
+
+
+class PrivacyCellUnsupported(NotImplementedError):
+    """The one typed impossibility in the privacy × speed matrix.
+
+    Every {wire} × {transport} × {privacy} cell either runs
+    (bit-correct under secagg, calibrated under dp) or raises exactly
+    this, with a message naming the cell — the conformance suite
+    (``tests/test_privacy_matrix.py``) and DESIGN.md §10 pin the set of
+    raising cells so the matrix can never silently regress. Subclasses
+    ``NotImplementedError`` so pre-existing callers that caught the
+    svd wire's probe refusal keep working.
+    """
+
+    def __init__(self, wire: str, transport: str, mode: str,
+                 reason: str):
+        self.cell = (wire, transport, mode)
+        super().__init__(f"privacy cell {wire}x{transport}x{mode} is "
+                         f"unsupported: {reason}")
+
+
+def support_matrix() -> dict:
+    """All 24 {wire}×{transport}×{privacy} cells → supported?
+
+    The single source of truth: the masked modes need an additive
+    encoding for pairwise pads to cancel through the merge, which the
+    svd wire's Iwen–Ong merge cannot provide (its probe explains why) —
+    those six cells raise :class:`PrivacyCellUnsupported`; every other
+    cell runs. DESIGN.md §10's table is asserted against this dict and
+    the conformance suite executes every cell.
+    """
+    out = {}
+    for wire in WIRE_NAMES:
+        for transport in TRANSPORT_NAMES:
+            for mode in MODES:
+                masked = mode in ("secagg", "secagg+dp")
+                out[(wire, transport, mode)] = \
+                    not (masked and wire == "svd")
+    return out
+
+
+def format_support_matrix() -> str:
+    """Render :func:`support_matrix` as the markdown table embedded in
+    DESIGN.md §10 (the conformance suite asserts the doc contains this
+    exact render, so the table cannot drift from the code)."""
+    matrix = support_matrix()
+    rows = ["| wire × transport | " + " | ".join(MODES) + " |",
+            "|---|" + "---|" * len(MODES)]
+    for wire in WIRE_NAMES:
+        for transport in TRANSPORT_NAMES:
+            cells = ["runs" if matrix[(wire, transport, mode)]
+                     else "raises (not additive)" for mode in MODES]
+            rows.append(f"| {wire} × {transport} | "
+                        + " | ".join(cells) + " |")
+    return "\n".join(rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,9 +162,12 @@ class PrivacyPolicy:
             return cls(mode=spec.strip().lower() or "none")
         raise ValueError(f"cannot parse privacy spec {spec!r}")
 
-    def begin(self, n_clients: int, wire) -> Optional["PrivacyRun"]:
+    def begin(self, n_clients: int, wire,
+              transport: str = "local") -> Optional["PrivacyRun"]:
         """Per-federation state for ``n_clients`` over ``wire``
-        (``None`` when the policy is inactive)."""
+        (``None`` when the policy is inactive). ``transport`` only
+        names the cell in the typed refusal — a wire that cannot carry
+        a mode cannot carry it on any transport."""
         if not self.active:
             return None
         session = None
@@ -105,13 +175,18 @@ class PrivacyPolicy:
         if self.secagg:
             # capability probe: additive wires return their (identity)
             # exact encoding, the svd wire raises NotImplementedError
-            probe = getattr(wire, "secagg_encode", None)
-            if probe is None:
-                raise NotImplementedError(
-                    f"wire {getattr(wire, 'name', wire)!r} declares no "
-                    "secagg encoding (see GramWire.secagg_encode); "
-                    "secure aggregation needs an additive wire")
-            probe()
+            try:
+                probe = getattr(wire, "secagg_encode", None)
+                if probe is None:
+                    raise NotImplementedError(
+                        f"wire {getattr(wire, 'name', wire)!r} declares "
+                        "no secagg encoding (see GramWire.secagg_encode)"
+                        "; secure aggregation needs an additive wire")
+                probe()
+            except NotImplementedError as e:
+                raise PrivacyCellUnsupported(
+                    getattr(wire, "name", str(wire)), transport,
+                    self.mode, str(e)) from e
             session = SecAggSession(
                 n_clients, seed=self.seed,
                 dtype=getattr(wire, "dtype", np.float32),
@@ -197,10 +272,35 @@ class MaskedWire(_WireBase):
                                     np.float32)).itemsize
         return (base_bytes // itemsize) * self.session.mod_bits // 8
 
-    def mesh_reduce(self, stats, axis: str):
-        raise NotImplementedError(
-            "mesh psum reduces floats on-device; exact masking needs "
-            "the in-process transports (local|stream)")
+    # -------------------------------------------------- device (traced)
+    def device_encode(self, stats, pad):
+        """Traceable client-side masking: one client's exact limb image
+        plus its summed pairwise pad (lazy ring add, :mod:`.limbs`).
+
+        The in-program mirror of :meth:`mask` — the engine's fused and
+        mesh programs call it per client/device with a pad row from
+        :meth:`~.secagg.SecAggSession.flat_pad_sums`; needs x64 mode
+        (the engine wraps its masked programs).
+        """
+        flat = _limbs.encode_tree(self.base.secagg_encode(stats),
+                                  self.session.words)
+        return _limbs.add_limbs(flat, pad)
+
+    def mesh_reduce(self, limbs, axis: str):
+        """The masked merge as a mesh collective: ring-reduce over limb
+        arrays. Each device carry-normalizes its lazy limbs (clean
+        base-2^32 digits bound the psum magnitude to ``Pₙ·2^32`` —
+        comfortable int64 headroom), then one psum sums the ring
+        elements. Integer addition is associative and ``mod 2^w`` a
+        ring homomorphism, so interior pads cancel on-device exactly as
+        in the host-side merge; only boundary-pad recovery and the
+        single decode remain host-side (``solve``). Takes the flat
+        ``(n_elems, words)`` image from :meth:`device_encode` —
+        :class:`~.secagg.MaskedStats` never materializes inside a
+        traced program; the host wraps the reduced aggregate back via
+        :meth:`~.secagg.SecAggSession.from_flat`.
+        """
+        return jax.lax.psum(_limbs.carry_limbs(limbs), axis)
 
     def validate_stats(self, stats) -> None:
         """Ledger pre-mutation validation hook: ring elements are
@@ -297,6 +397,43 @@ class PrivacyRun:
             return self.coord_wire.mask(cid, stats)
         return stats
 
+    def share_sigma(self, template) -> float:
+        """Each participant's noise-share scale σ/√cohort (secagg+dp) —
+        the static scalar the fused/mesh programs bake in (see
+        :meth:`client_encode` for the cohort semantics)."""
+        return self.sigma(template) / math.sqrt(self.cohort
+                                                or self.n_clients)
+
+    def share_keys(self, cids) -> np.ndarray:
+        """One fresh counter-keyed noise-share key per upload, as a
+        stacked ``(len(cids), …)`` key-data array a traced program can
+        consume. Draws from the same PRF stream as
+        :meth:`client_encode` — each call advances the per-run counter,
+        so a re-publishing client never reuses a share."""
+        ks = []
+        for cid in cids:
+            self._n_encodes += 1
+            ks.append(np.asarray(jax.random.key_data(
+                jax.random.fold_in(
+                    jax.random.fold_in(self._client_key, int(cid)),
+                    self._n_encodes))))
+        return np.stack(ks) if ks else \
+            np.zeros((0, 2), np.uint32)
+
+    def noise_shares_stacked(self, stats, keys, share: float):
+        """Traceable mirror of the loop path's noise-share step over a
+        stacked stats tree (leading axis = client): each row gets its
+        own σ/√cohort Gaussian share under its own key. ``share`` must
+        be a static Python float (σ is host-calibrated before the
+        program builds)."""
+        if share == 0.0:
+            return stats
+
+        def one(st, kd):
+            return self._noise(st, share, jax.random.wrap_key_data(kd))
+
+        return jax.vmap(one)(stats, jax.numpy.asarray(keys))
+
     # ------------------------------------------------- coordinator side
     def finalize(self, stats, salt: int = 0):
         """Pre-solve release step: accounts the ``(ε, δ)`` spend and,
@@ -350,7 +487,11 @@ class PrivacyRun:
     def _sensitivity(self, stats) -> float:
         if self.policy.sensitivity is not None:
             return self.policy.sensitivity
-        if isinstance(stats, GramStats):
+        if isinstance(stats, (GramStats, ClientStats)):
+            # both wires release (a function of) the same joint
+            # (G, m_vec) sums over samples — the svd factors only enter
+            # the solve through their Gram image (dp.noise_factor_stats)
+            # — so the analytic bound covers both
             wire = self.base_wire
             return _dp.sensitivity(
                 int(np.shape(stats.m_vec)[-1]), self.policy.clip,
@@ -364,6 +505,8 @@ class PrivacyRun:
     def _noise(stats, sigma: float, key):
         if isinstance(stats, GramStats):
             return _dp.noise_stats(stats, sigma, key)
+        if isinstance(stats, ClientStats):
+            return _dp.noise_factor_stats(stats, sigma, key)
         return _dp.noise_leaves_like(stats, sigma, key)
 
     # --------------------------------------------------------- summary

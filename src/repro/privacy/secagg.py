@@ -339,6 +339,53 @@ class SecAggSession:
         return MaskedStats(limbs=self._apply_pad(enc.limbs, pad, 1),
                            ids=enc.ids)
 
+    # ------------------------------------------------ device-path bridge
+    def flat_pad_sums(self, ids: Sequence[int]) -> np.ndarray:
+        """Each listed client's summed pad as one ``(len(ids), E, words)``
+        int64 stack — the host-side half of the jitted masked paths
+        (:mod:`.limbs`): the engine feeds these rows to a traced program
+        that encodes the stacked statistics and adds its client's pad
+        on-device. Uses the session-wide pad cache when it fits, else
+        derives per client on demand (same fallback as
+        :meth:`mask_upload`)."""
+        if self._treedef is None:
+            raise ValueError("bind the template (prepare/encode) before "
+                             "deriving pads")
+        self._ensure_pad_sums()
+        E, W = self.n_elems, self.words
+        rows = []
+        for cid in ids:
+            if not 0 <= cid < self.n_clients:
+                raise ValueError(f"client {cid} outside the session "
+                                 f"universe 0..{self.n_clients - 1}")
+            if isinstance(self._pad_sums, np.ndarray):
+                rows.append(self._pad_sums[cid])
+            else:
+                pad = self._pad_sum(self._client_pairs(cid))
+                rows.append(pad if pad is not None
+                            else np.zeros((E, W), np.int64))
+        return np.stack(rows) if rows else np.zeros((0, E, W), np.int64)
+
+    def from_flat(self, flat, ids: FrozenSet[int]) -> MaskedStats:
+        """Wrap a device-produced ``(n_elems, words)`` limb aggregate
+        (already masked + ring-summed by a jitted program) back into a
+        :class:`MaskedStats` in the template's leaf shapes, so the
+        ordinary coordinator surface (merge/unmask/solve) applies."""
+        if self._treedef is None:
+            raise ValueError("bind the template (prepare/encode) before "
+                             "wrapping device limbs")
+        flat = np.asarray(flat, np.int64)
+        if flat.shape != (self.n_elems, self.words):
+            raise ValueError(
+                f"device limbs of shape {flat.shape} do not match the "
+                f"template ({self.n_elems}, {self.words})")
+        out, off = [], 0
+        for shape, size in zip(self._shapes, self._sizes):
+            out.append(flat[off:off + size]
+                       .reshape(shape + (self.words,)))
+            off += size
+        return MaskedStats(limbs=tuple(out), ids=frozenset(ids))
+
     def recover_residual(self, ids: FrozenSet[int]
                          ) -> Optional[np.ndarray]:
         """Dropout recovery: the pad residue left in a sum over ``ids``.

@@ -1,14 +1,24 @@
 """Marker wiring: everything not ``slow`` is tier-1.
 
-``pyproject.toml`` registers the two markers; CI's fast lane is
+``pyproject.toml`` registers the markers; CI's fast lane is
 ``pytest -m tier1`` (scripts/ci_smoke.sh) while the full suite —
 ROADMAP.md's tier-1 verify command — still runs everything, slow
 subprocess mesh tests included.
+
+``privacy`` groups the privacy subsystem's tests (the §10 cell
+conformance matrix, limb-algebra properties, secagg/dp units) so
+``pytest -m privacy`` runs just that surface; they stay tier-1 by
+default — privacy regressions are correctness regressions.
 """
 import pytest
+
+_PRIVACY_FILES = ("test_privacy", "test_privacy_matrix", "test_limbs")
 
 
 def pytest_collection_modifyitems(items):
     for item in items:
+        if any(item.fspath.purebasename.startswith(p)
+               for p in _PRIVACY_FILES):
+            item.add_marker(pytest.mark.privacy)
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.tier1)

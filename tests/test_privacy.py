@@ -13,8 +13,10 @@
 * DP: noise is zero-mean with the calibrated σ, the exact Gaussian
   calibration is sufficient AND tight, the accountant rejects invalid
   (ε, δ), and ε=∞ bit-matches the clipped non-noised baseline,
-* the svd wire refuses masking with a real NotImplementedError; the
-  mesh transport and fused path refuse privacy policies loudly,
+* the svd wire refuses masking with a real NotImplementedError (the
+  full 24-cell wire × transport × privacy conformance matrix lives in
+  tests/test_privacy_matrix.py; the jitted limb-algebra properties in
+  tests/test_limbs.py),
 * the communication-energy satellite: ``CostModel`` uplink term
   monotonicity in P, and federated-vs-centralized crossover under it.
 """
@@ -287,10 +289,16 @@ def test_engine_secagg_run_events_leave_bitmatches_survivors():
         assert np.array_equal(np.asarray(a.W), np.asarray(b.W))
 
 
-def test_engine_secagg_coordinator_never_sees_plaintext(monkeypatch):
-    """Acceptance (spy): during a masked round, the base wire's merge
-    is never called, and its solve receives ONLY the decoded aggregate
-    (never a single client's statistics)."""
+@pytest.mark.parametrize("gear", ["loop", "batched", "fused", "mesh"])
+def test_engine_secagg_coordinator_never_sees_plaintext(monkeypatch,
+                                                        gear):
+    """Acceptance (spy): during a masked round — on the loop, batched
+    and FUSED gears and on the mesh transport alike — the base wire's
+    merge is never called host-side, and its solve receives ONLY the
+    decoded aggregate (never a single client's statistics). On the
+    fused path per-client plaintext exists only as traced
+    intermediates inside the one masked program; on the mesh it never
+    leaves the owning device."""
     pX, pD = _parts()
     total_n = sum(x.shape[0] for x in pX)
     merges, solves = [], []
@@ -303,7 +311,11 @@ def test_engine_secagg_coordinator_never_sees_plaintext(monkeypatch):
         GramWire, "solve",
         lambda self, stats, lam=1e-3: (solves.append(stats),
                                        real_solve(self, stats, lam))[1])
-    rep = FederationEngine(wire="gram", privacy="secagg").run(pX, pD)
+    kw = {"batched": dict(batch_clients=True),
+          "fused": dict(fused=True),
+          "mesh": dict(transport="mesh")}.get(gear, {})
+    rep = FederationEngine(wire="gram", privacy="secagg",
+                           **kw).run(pX, pD)
     assert not merges, "coordinator merged unmasked client statistics"
     assert len(solves) == 1
     # the one decoded object is the aggregate over ALL participants —
@@ -320,14 +332,24 @@ def test_svd_wire_refuses_masking():
         FederationEngine(wire="svd", privacy="secagg").run(pX, pD)
 
 
-def test_engine_rejects_privacy_on_mesh_and_fused():
+def test_privacy_composes_with_mesh_and_fused():
+    """Regression of the former loud rejections: the mesh transport
+    and the fused path now RUN privacy policies (the 24-cell
+    conformance matrix is tests/test_privacy_matrix.py); the one
+    refusal left is typed and names its cell. MaskedWire stays
+    client-addressed."""
+    from repro.privacy.policy import PrivacyCellUnsupported
     pX, pD = _parts(P=2)
-    with pytest.raises(ValueError, match="mesh"):
-        FederationEngine(wire="gram", transport="mesh",
+    rep_m = FederationEngine(wire="gram", transport="mesh",
+                             privacy="secagg").run(pX, pD)
+    rep_f = FederationEngine(wire="gram", fused=True,
+                             privacy="dp").run(pX, pD)
+    assert np.isfinite(np.asarray(rep_m.W)).all()
+    assert np.isfinite(np.asarray(rep_f.W)).all()
+    with pytest.raises(PrivacyCellUnsupported) as ei:
+        FederationEngine(wire="svd", transport="mesh",
                          privacy="secagg").run(pX, pD)
-    with pytest.raises(ValueError, match="fused"):
-        FederationEngine(wire="gram", fused=True,
-                         privacy="dp").run(pX, pD)
+    assert ei.value.cell == ("svd", "mesh", "secagg")
     with pytest.raises(NotImplementedError, match="client-addressed"):
         sess = SecAggSession(2, seed=0)
         MaskedWire(GramWire(), sess).local_stats(pX[0], pD[0])

@@ -1,0 +1,252 @@
+"""The privacy × speed matrix, cell by cell (ISSUE 6 acceptance).
+
+Every cell of {svd, gram} × {local, mesh, stream} × {none, secagg, dp,
+secagg+dp} — 24 in all — either RUNS with the documented guarantee or
+raises the one typed, documented impossibility:
+
+* ``secagg`` cells: the solved ``W`` bit-equals the exact (dyadic
+  accumulator) aggregation of the SAME per-client statistics that
+  transport computes — loop stats on local, chunk-folded stats on
+  stream, the device shard's stats on mesh,
+* ``dp`` cells: ε=∞ bit-matches (gram) / tightly matches (svd, whose
+  factor release re-solves through an eigendecomposition) the clipped
+  unprivate counterpart; finite ε releases are finite, calibrated and
+  accounted,
+* ``secagg+dp`` cells: ε=∞ collapses the noise shares to zero and
+  bit-equals the secagg-only run; finite ε is finite and accounted,
+* the 6 impossible cells — svd × {secagg, secagg+dp} × every transport
+  (the Iwen–Ong factor merge is not additive, so pairwise masks cannot
+  cancel over it) — raise :class:`PrivacyCellUnsupported` naming
+  exactly their cell.
+
+``support_matrix()`` is the machine-readable source of truth; this
+module asserts DESIGN.md §10's table is its verbatim render, so docs,
+code and tests cannot drift apart. The fused-gear regressions (a
+uniform masked round is ONE dispatch; masked buckets report per-client
+``wire_bytes``/``dispatches`` like the unprivate fused path) live here
+too.
+
+The mesh transport runs at axis size 1 on this single-device CPU host
+(the multi-device pad-cancellation collective is exercised by the slow
+subprocess test in ``tests/test_limbs.py``).
+"""
+import functools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import activations as acts
+from repro.core.engine import FederationEngine
+from repro.core.ledger import FederationLedger
+from repro.privacy import PrivacyPolicy, clip_rows
+from repro.privacy.policy import (MODES, TRANSPORT_NAMES, WIRE_NAMES,
+                                  PrivacyCellUnsupported,
+                                  format_support_matrix, support_matrix)
+
+P, M, C = 4, 5, 2
+CLIP = 3.0
+# past every row norm: clipping at this bound is a bitwise identity
+BIGCLIP = 1e6
+CELLS = [(w, t, m) for w in WIRE_NAMES for t in TRANSPORT_NAMES
+         for m in MODES]
+
+
+@functools.lru_cache(maxsize=None)
+def _parts(clip=None):
+    rng = np.random.default_rng(7)
+    pX, pD = [], []
+    for p in range(P):
+        X = rng.normal(size=(8 + 2 * p, M)).astype(np.float32)
+        pX.append(clip_rows(X, clip) if clip else X)
+        pD.append(np.asarray(acts.encode_labels(
+            rng.integers(0, C, size=X.shape[0]), C), np.float32))
+    return tuple(pX), tuple(pD)
+
+
+def _run(wire, transport, privacy=None, **kw):
+    pX, pD = _parts(kw.pop("clip", None))
+    eng = FederationEngine(wire, transport=transport, privacy=privacy,
+                           **kw)
+    return eng, eng.run(list(pX), list(pD))
+
+
+@functools.lru_cache(maxsize=None)
+def _unprivate_W(wire, transport, clip=None):
+    _, rep = _run(wire, transport, clip=clip)
+    return np.asarray(rep.W)
+
+
+@functools.lru_cache(maxsize=None)
+def _exact_masked_reference(transport):
+    """What a secagg cell must decode to: the EXACT (dyadic) fold of
+    the per-client statistics this transport computes — the float
+    merge order the unprivate engine happens to use is irrelevant,
+    ring addition never rounds."""
+    pX, pD = _parts()
+    if transport == "mesh":
+        # single-device axis: the one "client" is the concatenated
+        # pool, and a one-upload ring roundtrip is exact — the masked
+        # collective must reproduce the unprivate mesh solve bitwise
+        return _unprivate_W("gram", "mesh")
+    eng = FederationEngine("gram", transport=transport)
+    led = FederationLedger("gram")
+    for i in range(P):
+        led.join(i, eng._client_stats(pX[i], pD[i]))
+    return np.asarray(led.solve())
+
+
+@pytest.mark.parametrize("wire,transport,mode", CELLS)
+def test_cell_conformance(wire, transport, mode):
+    supported = support_matrix()[(wire, transport, mode)]
+    if not supported:
+        with pytest.raises(PrivacyCellUnsupported) as ei:
+            _run(wire, transport, privacy=mode)
+        assert ei.value.cell == (wire, transport, mode)
+        # the message names the cell and the escape hatch
+        assert f"{wire}x{transport}x{mode}" in str(ei.value)
+        assert "gram" in str(ei.value)
+        return
+    if mode == "none":
+        assert np.isfinite(_unprivate_W(wire, transport)).all()
+        return
+    if mode == "secagg":
+        _, rep = _run(wire, transport, privacy="secagg")
+        assert np.array_equal(np.asarray(rep.W),
+                              _exact_masked_reference(transport))
+        assert rep.privacy["mode"] == "secagg"
+        assert rep.privacy["upload_bytes"] > 0
+        return
+    if mode == "dp":
+        # ε=∞: clip-only, zero noise — must match the unprivate run
+        # over pre-clipped shards (bitwise on the additive gram wire;
+        # the svd factor release re-solves through an eigh, and the
+        # mesh dp program splits the solve out of the collective, so
+        # those compare to float tolerance)
+        _, rep = _run(wire, transport,
+                      privacy=PrivacyPolicy(mode="dp",
+                                            epsilon=math.inf,
+                                            clip=CLIP))
+        ref = _unprivate_W(wire, transport, clip=CLIP)
+        if wire == "gram" and transport != "mesh":
+            assert np.array_equal(np.asarray(rep.W), ref)
+        else:
+            np.testing.assert_allclose(np.asarray(rep.W), ref,
+                                       rtol=1e-5, atol=1e-6)
+        assert math.isinf(rep.privacy["eps_spent"])
+    # finite ε (dp and secagg+dp): finite, calibrated, accounted
+    pol = PrivacyPolicy(mode=mode, epsilon=1.0, delta=1e-5, clip=CLIP)
+    _, rep = _run(wire, transport, privacy=pol)
+    assert np.isfinite(np.asarray(rep.W)).all()
+    assert rep.privacy["eps_spent"] == 1.0
+    assert rep.privacy["sigma"] > 0
+    if mode == "secagg+dp":
+        # ε=∞ collapses every σ/√cohort share to zero: bit-identical
+        # to the secagg-only round on the same transport (clip bound
+        # past every row norm, so the clip is a bitwise no-op too —
+        # rows inside the ball are untouched)
+        _, rep0 = _run(wire, transport,
+                       privacy=PrivacyPolicy(mode="secagg+dp",
+                                             epsilon=math.inf,
+                                             clip=BIGCLIP))
+        _, reps = _run(wire, transport, privacy="secagg")
+        assert np.array_equal(np.asarray(rep0.W), np.asarray(reps.W))
+
+
+def test_support_matrix_shape_and_impossible_set():
+    sm = support_matrix()
+    assert set(sm) == set(CELLS) and len(sm) == 24
+    impossible = {cell for cell, ok in sm.items() if not ok}
+    assert impossible == {("svd", t, m) for t in TRANSPORT_NAMES
+                          for m in ("secagg", "secagg+dp")}
+
+
+def test_design_doc_matrix_is_the_rendered_source_of_truth():
+    """DESIGN.md §10's support table is format_support_matrix()'s
+    verbatim render — the docs cannot drift from the code the cell
+    tests run against."""
+    import pathlib
+    design = (pathlib.Path(__file__).parent.parent
+              / "DESIGN.md").read_text()
+    assert format_support_matrix() in design
+
+
+# ------------------------------------------------- fused-gear regressions
+def test_masked_fused_uniform_round_is_one_dispatch():
+    """Tentpole acceptance: a uniform masked round on the fused path is
+    ONE client-phase dispatch (stats → noise → encode → mask →
+    ring-merge in a single jitted program), and its W bit-equals the
+    masked loop round."""
+    rng = np.random.default_rng(0)
+    pX = [rng.normal(size=(8, M)).astype(np.float32) for _ in range(P)]
+    pD = [np.asarray(acts.encode_labels(
+        rng.integers(0, C, size=8), C), np.float32) for _ in range(P)]
+    rep_f = FederationEngine("gram", privacy="secagg",
+                             fused=True).run(pX, pD)
+    rep_l = FederationEngine("gram", privacy="secagg").run(pX, pD)
+    rep_u = FederationEngine("gram", fused=True).run(pX, pD)
+    assert rep_f.dispatches == 1 == rep_u.dispatches
+    assert np.array_equal(np.asarray(rep_f.W), np.asarray(rep_l.W))
+    # per-client upload accounting matches the loop path's: P uploads
+    # at the session's fixed ring size
+    assert rep_f.wire_bytes == rep_l.wire_bytes \
+        == P * rep_f.privacy["upload_bytes"]
+
+
+def test_masked_fused_buckets_report_bytes_and_dispatches():
+    """Regression (satellite): non-uniform masked fused rounds report
+    per-client wire_bytes and per-bucket dispatches exactly like the
+    unprivate fused path — and bit-match the masked batched path
+    (identical per-client statistics, both exactly ring-summed)."""
+    pX, pD = _parts()
+    pX, pD = list(pX), list(pD)
+    _, rep_f = _run("gram", "local", privacy="secagg", fused=True)
+    _, rep_b = _run("gram", "local", privacy="secagg",
+                    batch_clients=True)
+    _, rep_u = _run("gram", "local", fused=True)
+    assert np.array_equal(np.asarray(rep_f.W), np.asarray(rep_b.W))
+    assert rep_f.dispatches == rep_u.dispatches > 1
+    assert rep_f.wire_bytes == rep_b.wire_bytes \
+        == P * rep_f.privacy["upload_bytes"]
+    assert len(rep_f.client_times) == P
+
+
+def test_masked_fused_secagg_dp_eps_inf_bitmatches_secagg():
+    """share = σ/√cohort = 0 at ε=∞: the masked+dp fused program must
+    collapse to the secagg-only program bitwise."""
+    _, rep0 = _run("gram", "local", fused=True,
+                   privacy=PrivacyPolicy(mode="secagg+dp",
+                                         epsilon=math.inf,
+                                         clip=BIGCLIP))
+    _, reps = _run("gram", "local", fused=True, privacy="secagg")
+    assert np.array_equal(np.asarray(rep0.W), np.asarray(reps.W))
+
+
+def test_mesh_masked_reference_built_the_mesh_way():
+    """The mesh masked collective decodes to the host-side masked round
+    over the SAME device shards the mesh computes: bias pre-added,
+    zero-padded, add_bias=False wire."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.core.engine import pad_for_mesh
+    from repro.core.util import add_bias
+    from repro.core.wire import GramWire
+    from repro.privacy import SecAggSession
+
+    pX, pD = _parts()
+    X = np.concatenate(pX)
+    D = np.concatenate(pD)
+    eng = FederationEngine("gram", transport="mesh", privacy="secagg")
+    rep = eng.run(list(pX), list(pD))
+    Pn = 1                          # single-device CPU axis
+    wire = dataclasses.replace(GramWire(), add_bias=False)
+    Xb = np.asarray(add_bias(jnp.asarray(X)))
+    Xp, Dp = pad_for_mesh(Xb, D, Pn, wire.act)
+    sess = SecAggSession(Pn, seed=eng.privacy.seed)
+    agg = None
+    for dev in range(Pn):
+        sh = slice(dev * (len(Xp) // Pn), (dev + 1) * (len(Xp) // Pn))
+        up = sess.mask_upload(dev, wire.local_stats(Xp[sh], Dp[sh]))
+        agg = up if agg is None else sess.merge_signed(agg, up)
+    W_ref = wire.solve(sess.unmask(agg), eng.lam)
+    assert np.array_equal(np.asarray(rep.W), np.asarray(W_ref))
