@@ -18,6 +18,17 @@ engine round per (transport × wire × P × client-phase mode), recording
 * ``compiles``    — client-phase compile units: distinct shard shapes on
   the loop, distinct (bucket, stack-height) shapes on fleet/fused.
 
+The ``hierarchy`` section is the planet-scale companion (EXPERIMENTS.md
+§Planet scale): one tiered round per P ∈ {10³, 10⁴, 10⁵} (quick mode
+stops at 10⁴) on the gram wire under ``--topology fanout=64,tiers=3``,
+over ~2-sample shards — the cross-device regime where the flat
+coordinator's O(P·c·m²) residency and single-link ingest are the wall.
+Each row records the measured ``peak_coordinator_bytes`` (asserted flat
+in P: ≤ fanout·agg_bytes), the simulated tiered-vs-flat wall clock and
+uplink joules, and — at P ≤ 10³ — ``bit_identical_flat``: the tiered W
+compared bitwise against a one-tier (fanout=P) run of the same shards,
+the re-tiering exactness claim of DESIGN.md §11.
+
 Writes ``BENCH_fedround.json`` at the repo root (overridable) so CI and
 future sessions can diff perf trajectories —
 ``scripts/ci_smoke.sh`` asserts the file exists and is well-formed.
@@ -34,12 +45,15 @@ import numpy as np
 
 from repro.core import activations as acts
 from repro.core.engine import FederationEngine, _bucket_bound
-from repro.data import partition
+from repro.data import partition, synthetic
 
 from . import common
 
 P_GRID = [10, 100, 1000]
 P_GRID_QUICK = [10, 100]
+HIER_P_GRID = [1000, 10_000, 100_000]
+HIER_P_GRID_QUICK = [1000, 10_000]
+HIER_SPEC = "fanout=64,tiers=3"  # capacity 64³ = 262144 ≥ 10⁵
 MODES = [("loop", {}), ("fleet", {"batch_clients": True}),
          ("fused", {"fused": True})]
 WIRES = ["gram", "svd"]
@@ -54,6 +68,69 @@ def _compile_units(parts, mode):
         return len(set(ns))
     # one stacked shape — and so one compile unit — per distinct bucket
     return len({_bucket_bound(int(n)) for n in ns})
+
+
+def _hier_parts(P: int, dataset: str, seed: int):
+    """~2-sample shards for P clients: the cross-device regime."""
+    spec = synthetic.SPECS[dataset]
+    n = 2 * P
+    X, y = synthetic.generate(dataset, scale=(n + 1) / spec.n, seed=seed)
+    parts = partition.iid(X[:n], y[:n], P, seed=seed)
+    return ([p[0] for p in parts],
+            [np.asarray(acts.encode_labels(p[1], 2)) for p in parts])
+
+
+def run_hierarchy(dataset: str = "susy", quick: bool = False,
+                  seed: int = 0) -> dict:
+    """The ``hierarchy`` BENCH section: tiered rounds to P = 10⁵."""
+    rows = []
+    for P in (HIER_P_GRID_QUICK if quick else HIER_P_GRID):
+        pX, pD = _hier_parts(P, dataset, seed)
+        eng = FederationEngine(wire="gram", transport="local",
+                               warmup=True, topology=HIER_SPEC)
+        t0 = time.perf_counter()
+        eng.run(pX, pD)
+        wall_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r = eng.run(pX, pD)
+        wall = time.perf_counter() - t0
+        h = r.hierarchy
+        assert r.peak_coordinator_bytes <= h["peak_bound_bytes"], (
+            r.peak_coordinator_bytes, h["peak_bound_bytes"])
+        bit_identical = None
+        if P <= 1000:
+            # re-tiering exactness: same shards through a one-tier tree
+            # (the flat exact fold) must solve to the bitwise-same W
+            flat_eng = FederationEngine(
+                wire="gram", transport="local", warmup=True,
+                topology=f"fanout={P},tiers=1")
+            rf = flat_eng.run(pX, pD)
+            bit_identical = bool(np.array_equal(
+                np.asarray(r.W), np.asarray(rf.W)))
+        rows.append({
+            "P": P, "fanout": h["fanout"], "tiers": h["tiers"],
+            "mode": h["mode"], "n_aggregators": h["n_aggregators"],
+            "agg_bytes": h["agg_bytes"],
+            "peak_coordinator_bytes": r.peak_coordinator_bytes,
+            "peak_bound_bytes": h["peak_bound_bytes"],
+            "wall_s": round(wall, 6),
+            "wall_cold_s": round(wall_cold, 6),
+            "train_time": round(r.train_time, 6),
+            "sim_wall_tiered": round(h["sim_wall_tiered"], 6),
+            "sim_wall_flat": round(h["sim_wall_flat"], 6),
+            "uplink_j_tiered": round(h["uplink_j_tiered"], 6),
+            "uplink_j_flat": round(h["uplink_j_flat"], 6),
+            "bytes_tiered": h["bytes_tiered"],
+            "bytes_flat": h["bytes_flat"],
+            "bit_identical_flat": bit_identical,
+        })
+        print(f"[bench] hierarchy P={P}: peak "
+              f"{r.peak_coordinator_bytes / 1024:.1f} KiB "
+              f"(bound {h['peak_bound_bytes'] / 1024:.1f}), sim wall "
+              f"tiered {h['sim_wall_tiered']:.2f}s vs flat "
+              f"{h['sim_wall_flat']:.2f}s, bit_identical={bit_identical}")
+    return {"wire": "gram", "spec": HIER_SPEC, "dataset": dataset,
+            "shard_samples": 2, "rows": rows}
 
 
 def run(scale=None, dataset: str = "susy", quick: bool = False,
@@ -102,6 +179,7 @@ def run(scale=None, dataset: str = "susy", quick: bool = False,
         "dataset": dataset,
         "scale": common.DEFAULT_SCALE if scale is None else scale,
         "rows": rows,
+        "hierarchy": run_hierarchy(dataset, quick, seed),
     }
     path = json_path or JSON_DEFAULT
     # a fedround run resets the file; benchmarks/ledger_bench.py merges

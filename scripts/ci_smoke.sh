@@ -41,6 +41,15 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
   --wire gram --transport local --privacy secagg --fused
 
+# hierarchical aggregation end-to-end: a tiered round (edge → regional
+# → global) whose coordinator never holds more than fanout aggregates
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
+  --wire gram --transport local --topology "fanout=3,tiers=2"
+# masked tiers: interior pads cancel per-tier, root re-derives boundary
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
+  --wire gram --transport local --privacy secagg \
+  --topology "fanout=3,tiers=2"
+
 # the event-driven ledger path end-to-end: timeline rounds with a
 # checkpoint save, then a restore-and-continue run (bit-exact state)
 LEDGER_CKPT="$(mktemp -u /tmp/ci_ledger_XXXX.npz)"
@@ -111,10 +120,32 @@ assert {("fused", "baseline"), ("fused", "secagg"),
 fused_frac = pf["cpu_overhead"]["fused"]
 assert fused_frac <= 2.0, \
     f"fused+secagg SigmaCPU {fused_frac:.2f}x > 2x unprivate fused"
+# ISSUE 7 acceptance: the hierarchy section is well-formed, every row's
+# measured coordinator peak respects the fanout*agg_bytes bound, the
+# peak is FLAT across the P rows (the O(c*m^2)-residency claim), and
+# the tiered solve bit-matches the one-tier flat fold where checked
+hier = d["hierarchy"]
+assert hier["rows"], "empty hierarchy bench section"
+need_h = {"P", "fanout", "tiers", "mode", "agg_bytes",
+          "peak_coordinator_bytes", "peak_bound_bytes", "wall_s",
+          "sim_wall_tiered", "sim_wall_flat", "uplink_j_tiered",
+          "uplink_j_flat", "bit_identical_flat"}
+for r in hier["rows"]:
+    missing = need_h - set(r)
+    assert not missing, f"hierarchy row missing {missing}"
+    assert r["peak_coordinator_bytes"] <= r["peak_bound_bytes"], \
+        f"P={r['P']}: peak {r['peak_coordinator_bytes']} over bound"
+peaks = [r["peak_coordinator_bytes"] for r in hier["rows"]]
+assert max(peaks) <= 2 * min(peaks), \
+    f"coordinator peak not flat across P: {peaks}"
+for r in hier["rows"]:
+    if r["bit_identical_flat"] is not None:
+        assert r["bit_identical_flat"], \
+            f"P={r['P']}: tiered solve diverged from the flat fold"
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"ledger delta fracs {led['delta_cpu_frac']}, "
       f"secagg CPU {frac:.2f}x, fused+secagg {fused_frac:.2f}x, "
-      f"acc@eps {curve})")
+      f"acc@eps {curve}, hierarchy peaks {peaks})")
 PY
 
 echo "ci_smoke: OK"

@@ -1,7 +1,8 @@
 """Paper core: single-round analytic federated learning for one-layer NNs."""
 from . import activations, engine, federated, head, ledger, scenario, \
-    sharded, solver, wire
+    sharded, solver, topology, wire
 from .engine import FederationEngine, RoundReport
+from .topology import TierTree, Topology, simulate_round
 from .federated import (FedONNClient, FedONNCoordinator,
                         FedONNGramCoordinator, fed_fit, fed_fit_timed)
 from .ledger import ExactAccumulator, FederationLedger
@@ -16,9 +17,10 @@ from .wire import GramWire, SvdWire, Wire, get_wire
 
 __all__ = [
     "activations", "engine", "federated", "head", "ledger", "scenario",
-    "sharded", "solver", "wire",
+    "sharded", "solver", "topology", "wire",
     "FederationEngine", "RoundReport", "ClientRoles", "Scenario",
     "Timeline", "TimelineEvent", "ExactAccumulator", "FederationLedger",
+    "TierTree", "Topology", "simulate_round",
     "Wire", "SvdWire", "GramWire", "get_wire",
     "FedONNClient", "FedONNCoordinator", "FedONNGramCoordinator",
     "fed_fit", "fed_fit_timed",

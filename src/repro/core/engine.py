@@ -81,9 +81,11 @@ import numpy as np
 from . import activations as acts
 from .ledger import FederationLedger
 from .scenario import ClientRoles, Scenario, Timeline
+from .topology import ExactFold, Topology, simulate_round
 from .util import add_bias, as_2d
 from .wire import Wire, _WireBase, get_wire
 from ..energy import EnergyMeter, watt_hours
+from ..energy.meter import J_PER_BYTE
 from ..sharding import shard_map_compat
 
 TRANSPORTS = ("local", "mesh", "stream")
@@ -132,6 +134,14 @@ class RoundReport:
     # privacy bookkeeping (PrivacyRun.summary() — mode, σ, (ε, δ)
     # spent, masked upload bytes); None when the policy is "none"
     privacy: Optional[dict] = None
+    # coordinator residency (DESIGN.md §11): max wire-stats bytes the
+    # coordinator process held resident at any instant of the fold —
+    # O(P) on the flat paths, O(tiers·agg_bytes) under a Topology; on
+    # ledger ticks it is the registry (exact unlearning's price)
+    peak_coordinator_bytes: int = 0
+    # hierarchical rounds: tier shape, fold codec, and the simulated
+    # latency model's tiered-vs-flat wall/joule comparison
+    hierarchy: Optional[dict] = None
 
     @property
     def client_clocks(self) -> List[float]:
@@ -181,7 +191,8 @@ class FederationEngine:
                  backend: Any = "xla", tree: bool = True, chunks: int = 4,
                  warmup: bool = False, mesh=None, axis: str = "data",
                  dtype: Any = jnp.float32, batch_clients: bool = False,
-                 fused: bool = False, privacy: Any = None):
+                 fused: bool = False, privacy: Any = None,
+                 topology: Any = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
@@ -198,6 +209,9 @@ class FederationEngine:
         self.fused = bool(fused) and hasattr(self.wire, "fleet_stats") \
             and hasattr(self.wire, "merge_axis")
         self.batch_clients = bool(batch_clients) or self.fused
+        # hierarchical aggregation (core/topology.py, DESIGN.md §11):
+        # a parsed Topology routes run() through the tier-tree fold
+        self.topology = Topology.parse(topology)
         self._fused_cache = {}
         # imported here, not at module top: privacy/* imports the core
         # package, so a module-level import would cycle through a
@@ -254,6 +268,17 @@ class FederationEngine:
         if len(parts_X) != len(parts_d):
             raise ValueError("parts_X and parts_d length mismatch")
         parts_d = [as_2d(d) for d in parts_d]
+        if self.topology is not None:
+            # hierarchical round: the uploading units are the client
+            # shards on EVERY transport here — under a topology the
+            # mesh axis carries sibling edge aggregators, not clients
+            self._begin_privacy(len(parts_X))
+            with EnergyMeter() as em:
+                report = self._run_hierarchical(parts_X, parts_d)
+            report.cpu_seconds = em.cpu_seconds
+            if self._priv is not None:
+                report.privacy = self._priv.summary()
+            return report
         if self.transport != "mesh":
             # the mesh path's uploading units are the devices on the
             # axis, not the data partitions — run_mesh_arrays begins
@@ -443,7 +468,11 @@ class FederationEngine:
             coordinator_time=coordinator_time, wire_bytes=wire_bytes,
             roles=roles,
             n_samples=sum(int(data[i][0].shape[0]) for i in active),
-            dispatches=dispatches, tick=t, changed=tuple(changed))
+            dispatches=dispatches, tick=t, changed=tuple(changed),
+            # on event-driven ticks the REGISTRY is the residency: exact
+            # unlearning keeps every active client's statistics held, so
+            # a tier tree cannot flatten this number (DESIGN.md §11)
+            peak_coordinator_bytes=ledger.resident_bytes())
 
     # ------------------------------------------------- in-process paths
     def _client_stats(self, X, d):
@@ -527,7 +556,10 @@ class FederationEngine:
             wire_bytes=wire_bytes, roles=roles,
             n_samples=sum(int(parts_X[i].shape[0])
                           for i in roles.participants),
-            W_first=W_first, dispatches=dispatches)
+            W_first=W_first, dispatches=dispatches,
+            # the flat coordinator materializes every upload before the
+            # fold — residency IS the round's wire bytes, O(P)
+            peak_coordinator_bytes=wire_bytes)
 
     # -------------------------------------------- fleet-batched client phase
     def _buckets(self, parts_X, idxs):
@@ -662,7 +694,10 @@ class FederationEngine:
             roles=roles,
             n_samples=sum(int(parts_X[i].shape[0])
                           for i in roles.participants),
-            W_first=W_first, dispatches=dispatches)
+            W_first=W_first, dispatches=dispatches,
+            # per-client statistics materialize before the fold, as on
+            # the loop path: residency = the round's upload bytes
+            peak_coordinator_bytes=wire_bytes)
 
     # ------------------------------------------------------ fused round
     def _fused_fn(self, with_solve: bool):
@@ -777,12 +812,17 @@ class FederationEngine:
             bound, idxs = on_buckets[0]
             W = run_bucket(self._fused_fn(True), idxs, bound)
             W_first, coordinator_time = None, 0.0
+            peak = 0    # per-client stats and the aggregate live only
+            #             as traced intermediates of the one dispatch
         else:
             partial = self._fused_fn(False)
             on_aggs = [run_bucket(partial, idxs, bound)
                        for bound, idxs in on_buckets]
             late_aggs = [run_bucket(partial, idxs, bound)
                          for bound, idxs in late_buckets]
+            # every bucket aggregate is host-resident before the fold
+            peak = sum(self.wire.wire_bytes(a)
+                       for a in on_aggs + late_aggs)
             t0 = time.perf_counter()
             agg = self.wire.merge_many(on_aggs) if on_aggs else None
             W_first = None
@@ -807,7 +847,8 @@ class FederationEngine:
             roles=roles,
             n_samples=sum(int(parts_X[i].shape[0])
                           for i in roles.participants),
-            W_first=W_first, dispatches=dispatches)
+            W_first=W_first, dispatches=dispatches,
+            peak_coordinator_bytes=peak)
 
     def _run_fused_masked(self, parts_X, parts_d, roles, on_buckets,
                           late_buckets, time_by, wire_bytes
@@ -884,6 +925,9 @@ class FederationEngine:
                      for bound, idxs in late_buckets]
         late_aggs += mask_empties(
             [i for i in roles.late if int(parts_X[i].shape[0]) == 0])
+        # every masked bucket/empty-shard aggregate (a fixed-size ring
+        # element) is host-resident before the fold
+        peak = (len(on_aggs) + len(late_aggs)) * sess.upload_bytes
         t0 = time.perf_counter()
         agg = cw.merge_many(on_aggs)
         W_first = None
@@ -901,7 +945,422 @@ class FederationEngine:
             roles=roles,
             n_samples=sum(int(parts_X[i].shape[0])
                           for i in roles.participants),
-            W_first=W_first, dispatches=dispatches)
+            W_first=W_first, dispatches=dispatches,
+            peak_coordinator_bytes=peak)
+
+    # ------------------------------------------------ hierarchical round
+    def _hier_mode(self) -> str:
+        """The tier-exchange fold codec (DESIGN.md §11): ``masked``
+        (secagg policies — ring adds, interior pads cancel per tier),
+        ``exact`` (the dyadic-integer ring — bit-identical re-tiering),
+        or ``float`` (plain ``Wire.merge`` — allclose re-tiering)."""
+        topo = self.topology
+        if self._priv is not None and self._priv.masked:
+            return "masked"
+        capable = False
+        if topo.exact != "off":
+            try:
+                self.wire.secagg_encode()
+                capable = True
+            except (AttributeError, NotImplementedError, TypeError):
+                capable = False
+        if topo.exact == "on" and not capable:
+            raise ValueError(
+                "topology exact=on needs a wire with an exact additive "
+                f"encoding, but wire "
+                f"{getattr(self.wire, 'name', self.wire)!r} has none "
+                "(the Iwen-Ong factor merge is not additive); use "
+                "exact=off for the float fold")
+        return "exact" if capable else "float"
+
+    def _exact_fused_fn(self, words: int):
+        """One edge bucket's exact group fold as ONE jitted program:
+        fleet stats → exact dyadic limb encode → ring sum over the
+        member axis → carry-normalize. The unmasked twin of
+        ``_masked_fused_fn`` (no pads, no noise shares): its output is
+        the group's ring aggregate — the unit tiers exchange, whose
+        integer adds are order-independent, so any re-tiering decodes
+        to the bit-identical flat exact fold. Runs under x64 (int64
+        limbs); the f32 statistics are unchanged by it (weak typing,
+        pinned by the conformance suite)."""
+        key = ("exact", words)
+        if key not in self._fused_cache:
+            from ..privacy import limbs as _limbs
+            wire = self.wire
+
+            def prog(Xs, Ds, ns):
+                st = wire.fleet_stats(Xs, Ds, ns)
+                enc = _limbs.encode_tree(wire.secagg_encode(st), words,
+                                         stacked=True)
+                return _limbs.carry_limbs(_limbs.sum_limbs(enc))
+
+            donate = (0, 1) if jax.default_backend() != "cpu" else ()
+            self._fused_cache[key] = jax.jit(prog, donate_argnums=donate)
+        return self._fused_cache[key]
+
+    def _hier_mesh_groups(self, parts_X, parts_d, tree, subset, mode,
+                          words, time_by, warmed):
+        """ALL of ``subset``'s edge groups as ONE sharded dispatch:
+        sibling edge aggregators ride the mesh axis (each device runs a
+        whole group's fused fold), groups padded to a uniform
+        (gsize, bound) stack and the group count padded to divide the
+        axis with all-zero dummy groups (dropped on return). Returns
+        ``({edge_idx: aggregate}, n_dispatches)``.
+
+        Unlike the host tree walk this materializes every sibling's
+        aggregate at once — peak residency is n_groups·agg_bytes, the
+        devices-for-memory trade the mesh makes (the bench's flat-in-P
+        row therefore runs the local transport)."""
+        import contextlib
+        from jax.experimental import enable_x64
+        from jax.sharding import PartitionSpec as P
+        wire = self.wire
+        mesh = self.mesh or make_client_mesh(axis=self.axis)
+        Dn = mesh.shape[self.axis]
+        groups = []
+        for e, ids in enumerate(tree.levels[0]):
+            members = [i for i in ids if i in subset
+                       and int(parts_X[i].shape[0]) > 0]
+            if members:
+                groups.append((e, members))
+        if not groups:
+            return {}, 0
+        gsize = max(len(m) for _, m in groups)
+        bound = max(_bucket_bound(int(parts_X[i].shape[0]))
+                    for _, m in groups for i in m)
+        G = -(-len(groups) // Dn) * Dn
+        np_dtype = np.dtype(getattr(wire, "dtype", np.float32))
+        i00 = groups[0][1][0]
+        m_in, c = parts_X[i00].shape[1], parts_d[i00].shape[1]
+        mid = float(acts.get(wire.act).f(jnp.zeros((), jnp.float32)))
+        Xs = np.zeros((G, gsize, bound, m_in), np_dtype)
+        Ds = np.full((G, gsize, bound, c), mid, np_dtype)
+        ns = np.zeros((G, gsize), np.int32)
+        for g, (_, members) in enumerate(groups):
+            for row, i in enumerate(members):
+                n = int(parts_X[i].shape[0])
+                Xs[g, row, :n] = np.asarray(parts_X[i], np_dtype)
+                Ds[g, row, :n] = np.asarray(parts_d[i], np_dtype)
+                ns[g, row] = n
+
+        if mode == "exact":
+            from ..privacy import limbs as _limbs
+
+            def group_prog(Xg, Dg, ng):
+                st = wire.fleet_stats(Xg, Dg, ng)
+                enc = _limbs.encode_tree(wire.secagg_encode(st), words,
+                                         stacked=True)
+                return _limbs.carry_limbs(_limbs.sum_limbs(enc))
+
+            out_specs = P(self.axis, None, None)
+            ctx = enable_x64()
+        else:
+            def group_prog(Xg, Dg, ng):
+                return wire.merge_axis(wire.fleet_stats(Xg, Dg, ng))
+
+            template = jax.eval_shape(
+                jax.vmap(group_prog),
+                jax.ShapeDtypeStruct(Xs.shape, Xs.dtype),
+                jax.ShapeDtypeStruct(Ds.shape, Ds.dtype),
+                jax.ShapeDtypeStruct(ns.shape, ns.dtype))
+            out_specs = jax.tree_util.tree_map(
+                lambda s: P(self.axis, *([None] * (len(s.shape) - 1))),
+                template)
+            ctx = contextlib.nullcontext()
+        fn = shard_map_compat(
+            jax.vmap(group_prog), mesh=mesh,
+            in_specs=(P(self.axis, None, None, None),
+                      P(self.axis, None, None, None),
+                      P(self.axis, None)),
+            out_specs=out_specs)
+        with ctx:
+            wk = ("hier-mesh", mode, G, gsize, bound)
+            if self.warmup and wk not in warmed:
+                warmed.add(wk)
+                jax.block_until_ready(fn(Xs, Ds, ns))
+            t0 = time.perf_counter()
+            out = fn(Xs, Ds, ns)
+            jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        flat_members = [i for _, m in groups for i in m]
+        flat_ns = np.asarray([int(parts_X[i].shape[0])
+                              for i in flat_members])
+        self._share_times(time_by, flat_members, flat_ns, dt)
+        result = {}
+        for g, (e, _) in enumerate(groups):
+            if mode == "exact":
+                result[e] = np.asarray(out[g])
+            else:
+                result[e] = jax.tree_util.tree_map(lambda lf: lf[g], out)
+        return result, 1
+
+    def _run_hierarchical(self, parts_X, parts_d) -> RoundReport:
+        """One round over ``self.topology``'s tier tree (DESIGN.md §11).
+
+        The in-process engine plays every role: each edge aggregator's
+        fold runs as the fleet-batched pow2-bucket FUSED program over
+        its members (their stat passes and the edge fold are one
+        dispatch — timed into ``client_times`` by sample share), and
+        tier merges stream depth-first through :meth:`TierTree.fold`,
+        so the coordinator process never holds more than one open
+        aggregate per tier plus the group being folded
+        (``peak_coordinator_bytes`` meters it). On the stream transport
+        members chunk-fold individually; on the mesh transport sibling
+        edge aggregators share one sharded dispatch
+        (:meth:`_hier_mesh_groups`).
+
+        Late joiners fold through a second tree pass whose root merges
+        into the on-time root after ``W_first`` — dropout of a whole
+        edge group simply yields no aggregate for that leaf. The
+        simulated latency model (:func:`~.topology.simulate_round`)
+        prices the same round's uploads tiered vs flat into
+        ``report.hierarchy``; ``wire_bytes`` counts the tiered plan
+        (client uploads + one uplink per non-root aggregator).
+        """
+        import contextlib
+        from jax.experimental import enable_x64
+        topo = self.topology
+        P = len(parts_X)
+        roles = self.scenario.roles(P)
+        priv = self._priv
+        if priv is not None:
+            priv.cohort = len(roles.participants)
+        tree = topo.tree(P)
+        mode = self._hier_mode()
+        if mode == "masked" and self.transport == "mesh":
+            raise ValueError(
+                "masked hierarchical rounds need an in-process "
+                "transport (local|stream): the mesh's sibling-"
+                "aggregator collective would materialize every group's "
+                "masked pool at once with no tier to cancel pads in")
+        time_by = {i: 0.0 for i in roles.participants}
+        if priv is not None and priv.policy.dp:
+            # per-row clipping is client-side work, timed per client
+            parts_X = list(parts_X)
+            for i in roles.participants:
+                t0 = time.perf_counter()
+                parts_X[i] = priv.clip(parts_X[i])
+                time_by[i] = time.perf_counter() - t0
+        i0 = roles.participants[0] if roles.participants else 0
+        m_in = parts_X[i0].shape[1] if P else 0
+        c = parts_d[i0].shape[1] if P else 1
+        template = self.wire.local_stats(
+            np.asarray(parts_X[i0])[:0], np.asarray(parts_d[i0])[:0])
+        folder = sess = None
+        share = 0.0
+        cw = self._cw()
+        if mode == "exact":
+            folder = ExactFold(self.wire, template)
+            agg_bytes = folder.agg_bytes
+        elif mode == "masked":
+            priv.prepare(template)
+            sess = priv.session
+            from ..privacy.limbs import check_fleet_headroom
+            # any single tier ring-sums at most one group (≤ fanout ≤
+            # the lazy-carry headroom); host merges carry-normalize
+            check_fleet_headroom(tree.max_group)
+            share = priv.share_sigma(template) if priv.policy.dp else 0.0
+            agg_bytes = sess.upload_bytes
+        else:
+            # one AGGREGATE's wire size (svd factor rank caps at m)
+            agg_bytes = self.wire.stats_bytes(m_in + 1, m_in, c)
+        meter = _PeakMeter()
+        dispatches = 0
+        merge_s = 0.0
+        merges = 0
+        warmed = set()
+
+        def size_of(a):
+            if mode == "exact":
+                return folder.agg_bytes
+            if mode == "masked":
+                return sess.upload_bytes
+            return self.wire.wire_bytes(a)
+
+        def tier_add(a, b):
+            if mode == "exact":
+                return folder.add(a, b)
+            if mode == "masked":
+                return cw.merge(a, b)
+            return self.wire.merge(a, b)
+
+        def merge_fn(level, acc, sub):
+            nonlocal merge_s, merges
+            sa, sb = size_of(acc), size_of(sub)
+            t0 = time.perf_counter()
+            out = tier_add(acc, sub)
+            merge_s += time.perf_counter() - t0
+            merges += 1
+            meter.pop(sa)
+            meter.pop(sb)
+            meter.push(size_of(out))
+            return out
+
+        def run_bucket(b_idxs, bound):
+            """One pow2 shape bucket of one edge group, one dispatch."""
+            nonlocal dispatches
+            Xs, Ds, ns = self._stack_bucket(parts_X, parts_d, b_idxs,
+                                            bound)
+            extra = ()
+            if mode == "exact":
+                fn, ctx = self._exact_fused_fn(folder.words), \
+                    enable_x64()
+            elif mode == "masked":
+                fn, ctx = self._masked_fused_fn(share), enable_x64()
+                keys = priv.share_keys(b_idxs) if priv.policy.dp else \
+                    np.zeros((len(b_idxs), 2), np.uint32)
+                extra = (sess.flat_pad_sums(b_idxs), keys)
+            else:
+                fn, ctx = self._fused_fn(False), contextlib.nullcontext()
+            with ctx:
+                wk = (mode, bound, len(b_idxs))
+                if self.warmup and wk not in warmed:
+                    warmed.add(wk)
+                    jax.block_until_ready(fn(*self._stack_bucket(
+                        parts_X, parts_d, b_idxs, bound), *extra))
+                t0 = time.perf_counter()
+                out = fn(Xs, Ds, ns, *extra)
+                jax.block_until_ready(out)
+            dispatches += 1
+            self._share_times(time_by, b_idxs, ns,
+                              time.perf_counter() - t0)
+            if mode == "exact":
+                return np.asarray(out)
+            if mode == "masked":
+                return sess.from_flat(np.asarray(out),
+                                      frozenset(int(i) for i in b_idxs))
+            return out
+
+        def client_stat(i):
+            """One member's individual pass (stream transport's chunk
+            fold, or a masked empty shard's pad-carrying upload), then
+            the codec's per-client encode — timed like the loop path."""
+            nonlocal dispatches
+            if self.warmup and ("client",) not in warmed:
+                warmed.add(("client",))
+                jax.block_until_ready(
+                    self._client_stats(parts_X[i], parts_d[i]))
+            t0 = time.perf_counter()
+            st = self._client_stats(parts_X[i], parts_d[i])
+            jax.block_until_ready(st)
+            if mode == "exact":
+                st = folder.encode(st)
+            elif mode == "masked":
+                st = priv.client_encode(int(i), st)
+            time_by[i] = time_by.get(i, 0.0) + \
+                (time.perf_counter() - t0)
+            dispatches += 1
+            return st
+
+        stream = self.transport == "stream"
+
+        if self.transport == "mesh":
+            def make_leaf(subset):
+                nonlocal dispatches
+                pre, nd = self._hier_mesh_groups(
+                    parts_X, parts_d, tree, subset, mode,
+                    folder.words if mode == "exact" else 0,
+                    time_by, warmed)
+                dispatches += nd
+                for a in pre.values():
+                    meter.push(size_of(a))
+
+                def leaf(e, ids):
+                    return pre.pop(e, None)
+                return leaf
+        else:
+            def make_leaf(subset):
+                def leaf(e, ids):
+                    members = [i for i in ids if i in subset]
+                    acc = None
+
+                    def take(sub):
+                        nonlocal acc
+                        meter.push(size_of(sub))
+                        acc = sub if acc is None else \
+                            merge_fn(0, acc, sub)
+
+                    if stream:
+                        for i in members:
+                            if mode != "masked" and \
+                                    int(parts_X[i].shape[0]) == 0:
+                                continue    # exactly-zero statistics
+                            take(client_stat(i))
+                        return acc
+                    for bound, b_idxs in self._buckets(parts_X,
+                                                       members):
+                        if bound > 0:
+                            take(run_bucket(b_idxs, bound))
+                    if mode == "masked":
+                        # empty shards still publish under masking:
+                        # their zero statistics carry pads (and noise
+                        # shares) the tier aggregate needs to cancel
+                        for i in members:
+                            if int(parts_X[i].shape[0]) == 0:
+                                take(client_stat(i))
+                    return acc
+                return leaf
+
+        root = tree.fold(make_leaf(set(roles.on_time)), merge_fn)
+        if root is None:
+            # every on-time shard was empty: the round still solves,
+            # over the exactly-zero aggregate
+            root = folder.zero() if mode == "exact" else \
+                self.wire.merge_stream(
+                    self.wire.local_stats(parts_X[i], parts_d[i])
+                    for i in roles.on_time)
+            meter.push(size_of(root))
+        coord_s = 0.0
+
+        def solve_root(agg, salt):
+            nonlocal coord_s
+            t0 = time.perf_counter()
+            stats = folder.decode(agg) if mode == "exact" else agg
+            wire = cw if mode == "masked" else self.wire
+            W = wire.solve(self._release(stats, salt=salt), self.lam)
+            jax.block_until_ready(W)
+            coord_s += time.perf_counter() - t0
+            return W
+
+        W_first = None
+        if roles.late:
+            # first solve from the on-time tree — a usable model — then
+            # the late joiners fold through their own tree pass and
+            # merge in at the root (paper §3.2, re-tiered)
+            W_first = solve_root(root, salt=1)
+            late_root = tree.fold(make_leaf(set(roles.late)), merge_fn)
+            if late_root is not None:
+                root = merge_fn(tree.tiers, root, late_root)
+        W = solve_root(root, salt=0)
+
+        if mode == "masked":
+            client_bytes = {i: sess.upload_bytes
+                            for i in roles.participants}
+        else:
+            client_bytes = {
+                i: self.wire.stats_bytes(int(parts_X[i].shape[0]),
+                                         m_in, c)
+                for i in roles.participants}
+        client_ready = {i: time_by.get(i, 0.0) + roles.delays[i]
+                        for i in roles.participants}
+        sim = simulate_round(tree, topo, client_ready=client_ready,
+                             client_bytes=client_bytes,
+                             agg_bytes=agg_bytes,
+                             merge_cost=merge_s / max(merges, 1),
+                             j_per_byte=J_PER_BYTE)
+        hierarchy = {"fanout": topo.fanout, "tiers": topo.tiers,
+                     "mode": mode, "n_groups": tree.n_edges,
+                     "agg_bytes": int(agg_bytes),
+                     "peak_bound_bytes": int(topo.fanout * agg_bytes),
+                     **sim}
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=merge_s + coord_s,
+            wire_bytes=int(sim["bytes_tiered"]), roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=dispatches,
+            peak_coordinator_bytes=meter.peak, hierarchy=hierarchy)
 
     # -------------------------------------------------------- mesh path
     def _mesh_masked(self, mesh, wire, X, D, Pn):
@@ -950,6 +1409,27 @@ class FederationEngine:
             out = fn(X, D, pads, keys)
             jax.block_until_ready(out)
         agg = sess.from_flat(np.asarray(out), frozenset(range(Pn)))
+        W = cw.solve(self._release(agg, salt=0), lam)
+        jax.block_until_ready(W)
+        return W, time.perf_counter() - t0
+
+    def _mesh_masked_host(self, wire, X, D):
+        """The masked round when the mesh axis has ONE device: the
+        whole dataset is that device's shard, pads are vacuous (a
+        single-member session derives no pairs), and the on-device
+        limb-encode + psum would cost a full ring program to reduce
+        nothing. Run the host secagg path instead — same key stream,
+        same session, so ``W`` bit-matches the collective's (tested);
+        DESIGN.md §10 documents the crossover."""
+        priv, cw, lam = self._priv, self._cw(), self.lam
+        template = wire.local_stats(X[:0], D[:0])
+        priv.prepare(template)
+        if self.warmup:
+            jax.block_until_ready(wire.local_stats(X, D))
+        t0 = time.perf_counter()
+        st = wire.local_stats(X, D)
+        jax.block_until_ready(st)
+        agg = priv.client_encode(0, st)
         W = cw.solve(self._release(agg, salt=0), lam)
         jax.block_until_ready(W)
         return W, time.perf_counter() - t0
@@ -1012,8 +1492,16 @@ class FederationEngine:
 
         from jax.sharding import PartitionSpec as P
         if priv is not None and priv.masked:
-            W, coordinator_time = self._mesh_masked(
-                mesh, wire, X, D, Pn)
+            from ..privacy.policy import prefer_host_secagg
+            if prefer_host_secagg(Pn):
+                # degenerate collective (axis size 1): nothing to psum,
+                # so the limb-encode program would be pure overhead —
+                # take the host secagg path, which is bit-identical
+                # here (crossover documented in DESIGN.md §10)
+                W, coordinator_time = self._mesh_masked_host(wire, X, D)
+            else:
+                W, coordinator_time = self._mesh_masked(
+                    mesh, wire, X, D, Pn)
         elif priv is not None and priv.policy.dp:
             # plaintext on-device reduce (noise is central, added once
             # at release): the collective returns the replicated
@@ -1078,7 +1566,31 @@ class FederationEngine:
         return RoundReport(W=W, client_times=client_times,
                            coordinator_time=coordinator_time,
                            wire_bytes=wire_bytes, roles=roles,
-                           n_samples=n, dispatches=1)
+                           n_samples=n, dispatches=1,
+                           # the collective reduces on-device: the host
+                           # only ever holds ONE replicated aggregate
+                           peak_coordinator_bytes=bytes_wire.stats_bytes(
+                               n_local, X.shape[1], D.shape[1]))
+
+
+class _PeakMeter:
+    """Live coordinator wire-stats residency (bytes): ``push`` when an
+    aggregate materializes host-side, ``pop`` when the fold consumes
+    it; ``peak`` backs ``RoundReport.peak_coordinator_bytes``. Counts
+    wire-stats OBJECTS only — stacked client data and XLA transients
+    are inputs, not coordinator state (DESIGN.md §11)."""
+
+    def __init__(self):
+        self.cur = 0
+        self.peak = 0
+
+    def push(self, n: int) -> None:
+        self.cur += int(n)
+        if self.cur > self.peak:
+            self.peak = self.cur
+
+    def pop(self, n: int) -> None:
+        self.cur -= int(n)
 
 
 def _default_revise(X, d, tick: int):

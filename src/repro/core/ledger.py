@@ -228,6 +228,22 @@ class FederationLedger:
         jax.block_until_ready(W)
         return W
 
+    def resident_bytes(self) -> int:
+        """Coordinator-resident wire-stats bytes: every active client's
+        registry entry plus one global aggregate. Exact unlearning is
+        *paid for* in residency — the registry must persist so any
+        departure can be downdated exactly — so a tier topology cannot
+        flatten event-driven rounds the way it flattens one-shot folds
+        (``RoundReport.peak_coordinator_bytes`` reports this number on
+        ledger ticks; DESIGN.md §11)."""
+        total = sum(self.wire.wire_bytes(st)
+                    for st in self.registry.values())
+        if self.registry and (self._acc is not None
+                              or self._agg is not None):
+            total += max(self.wire.wire_bytes(st)
+                         for st in self.registry.values())
+        return total
+
     # ------------------------------------------------------ checkpoint
     def state_tree(self):
         """Checkpointable pytree: registry + metadata (flat-npz safe)."""

@@ -44,6 +44,40 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def parse_kv_fields(cls, spec: Optional[str], what: str) -> dict:
+    """Shared ``key=value,key=value`` spec grammar for dataclass flags.
+
+    The launcher's ``--scenario`` and ``--topology`` flags speak the
+    same dialect: keys are the dataclass fields (``-`` reads as ``_``),
+    values coerce through the field default's type, and every malformed
+    item — missing ``=``, unknown key, uncoercible value — raises
+    ``ValueError`` quoting the offending token as ``bad {what} item
+    {token!r}``. Returns the parsed kwargs ({} for ``None``/``""``/
+    ``"none"``); range validation stays with the caller, which knows
+    the semantics.
+    """
+    if not spec or spec.strip().lower() == "none":
+        return {}
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = {}
+    for item in spec.split(","):
+        key, sep, val = item.partition("=")
+        key = key.strip().replace("-", "_")
+        if not sep or key not in fields:
+            raise ValueError(
+                f"bad {what} item {item!r} (known keys: "
+                f"{sorted(fields)})")
+        default = getattr(cls, key)
+        try:
+            kw[key] = val.strip() if isinstance(default, str) else \
+                type(default)(val)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"bad {what} value in {item!r} (expected "
+                f"{type(default).__name__})") from None
+    return kw
+
+
 @dataclasses.dataclass(frozen=True)
 class ClientRoles:
     """Role assignment for one round — indices into the client list."""
@@ -110,33 +144,17 @@ class Scenario:
         α), unknown partitioner — raises ``ValueError`` quoting the
         offending token.
         """
-        if not spec or spec.strip().lower() == "none":
-            return cls()
-        fields = {f.name for f in dataclasses.fields(cls)}
-        kw = {}
-        for item in spec.split(","):
-            key, sep, val = item.partition("=")
-            key = key.strip().replace("-", "_")
-            if not sep or key not in fields:
-                raise ValueError(
-                    f"bad scenario item {item!r} (known keys: "
-                    f"{sorted(fields)})")
-            default = getattr(cls, key)
-            try:
-                kw[key] = val.strip() if isinstance(default, str) else \
-                    type(default)(val)
-            except (TypeError, ValueError):
-                raise ValueError(
-                    f"bad scenario value in {item!r} (expected "
-                    f"{type(default).__name__})") from None
+        kw = parse_kv_fields(cls, spec, "scenario")
+        for key, val in kw.items():
+            item = f"{key}={val}"
             if key in ("dropout", "late_join", "straggler_frac") and \
-                    not 0.0 <= kw[key] <= 1.0:
+                    not 0.0 <= val <= 1.0:
                 raise ValueError(f"bad scenario item {item!r}: "
                                  f"{key} must be in [0, 1]")
-            if key == "straggler_delay" and kw[key] < 0.0:
+            if key == "straggler_delay" and val < 0.0:
                 raise ValueError(f"bad scenario item {item!r}: "
                                  "straggler_delay must be >= 0")
-            if key == "alpha" and not kw[key] > 0.0:
+            if key == "alpha" and not val > 0.0:
                 raise ValueError(f"bad scenario item {item!r}: "
                                  "alpha must be > 0")
         if "partition" in kw:

@@ -94,6 +94,20 @@ class _WireBase:
             agg = self.merge(agg, st)
         return agg
 
+    def merge_stream(self, stats_iter):
+        """Left-fold an ITERATOR of statistics without materializing
+        the list — at any instant only the running aggregate and the
+        incoming item are resident, the O(c·m²) streaming primitive a
+        tier aggregator runs (``core/topology.py``, DESIGN.md §11).
+        Same bracketing as :meth:`merge_many` (bit-identical on
+        additive wires); returns ``None`` for an empty iterator, so an
+        all-empty tier can be skipped rather than raise mid-stream.
+        """
+        agg = None
+        for st in stats_iter:
+            agg = st if agg is None else self.merge(agg, st)
+        return agg
+
     def merge_tree(self, stats_list: Sequence):
         """Pairwise log-depth fold (what a real coordinator pool does)."""
         items = list(stats_list)

@@ -54,6 +54,13 @@ def main():
                          'straggler_delay=0.5" (see core/scenario.py)')
     ap.add_argument("--chunks", type=int, default=4,
                     help="chunks per client on the stream transport")
+    ap.add_argument("--topology", default="none",
+                    help='hierarchical aggregation spec, e.g. '
+                         '"fanout=64,tiers=3,rtt=0.05,bw=1e6" — clients '
+                         'fold through edge/regional tiers so no '
+                         'aggregator ever holds more than fanout stats '
+                         '(see core/topology.py); single-round only, '
+                         'incompatible with --timeline')
     ap.add_argument("--batch-clients", action="store_true",
                     help="fleet-batched client phase: one dispatch per "
                          "power-of-two shape bucket (local transport)")
@@ -95,6 +102,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.timeline is not None and args.topology not in (None, "none", ""):
+        raise SystemExit(
+            "[fedtrain] --topology is incompatible with --timeline: the "
+            "ledger's delta rounds re-solve from its registry, which is "
+            "inherently resident at the coordinator — there is no tier "
+            "tree to fold it through; drop one of the two")
+
     scenario = Scenario.parse(args.scenario)
     # --partition/--seed are the defaults; an explicit scenario key wins
     if "partition" not in args.scenario:
@@ -114,7 +128,8 @@ def main():
                               lam=args.lam, backend=args.backend,
                               chunks=args.chunks, warmup=True,
                               batch_clients=args.batch_clients,
-                              fused=args.fused, privacy=policy)
+                              fused=args.fused, privacy=policy,
+                              topology=args.topology)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
@@ -141,6 +156,22 @@ def main():
           f"{report.wire_bytes / 1024:.1f} KiB | client-phase dispatches: "
           f"{report.dispatches}")
     _print_privacy(report)
+    _print_hierarchy(report)
+
+
+def _print_hierarchy(report):
+    h = report.hierarchy
+    if not h:
+        return
+    print(f"[fedtrain] topology: fanout={h['fanout']} tiers={h['tiers']} "
+          f"mode={h['mode']} — {h['n_aggregators']} aggregators over "
+          f"{h['n_participants']} clients")
+    print(f"[fedtrain] coordinator peak "
+          f"{report.peak_coordinator_bytes / 1024:.1f} KiB resident "
+          f"(bound fanout·agg = {h['peak_bound_bytes'] / 1024:.1f} KiB)")
+    print(f"[fedtrain] simulated round: tiered "
+          f"{h['sim_wall_tiered']:.3f}s / {h['uplink_j_tiered']:.3f}J vs "
+          f"flat {h['sim_wall_flat']:.3f}s / {h['uplink_j_flat']:.3f}J")
 
 
 def _print_privacy(report):

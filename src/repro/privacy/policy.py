@@ -108,6 +108,24 @@ def format_support_matrix() -> str:
     return "\n".join(rows)
 
 
+def prefer_host_secagg(axis_size: int) -> bool:
+    """Crossover predicate for the masked mesh collective (DESIGN.md
+    §10): should the engine skip :meth:`MaskedWire.mesh_reduce` and
+    mask host-side instead?
+
+    The collective pays a full limb-encode + carry + psum program per
+    device regardless of how many devices share the axis. With ONE
+    device there is nothing to reduce — a single-member session derives
+    no pairwise pads — so the host path (one ``local_stats`` + one
+    host-side mask) produces the bit-identical ``W`` for a fraction of
+    the dispatch cost. Axis size 1 is the only regime where the host
+    path strictly dominates: from two devices up, the on-device
+    interior-pad cancellation is what keeps per-client plaintext off
+    the host, which no host-side shortcut can match.
+    """
+    return int(axis_size) <= 1
+
+
 @dataclasses.dataclass(frozen=True)
 class PrivacyPolicy:
     """What privacy mechanism a federation runs, and its parameters.
