@@ -29,6 +29,13 @@ uplink joules, and — at P ≤ 10³ — ``bit_identical_flat``: the tiered W
 compared bitwise against a one-tier (fanout=P) run of the same shards,
 the re-tiering exactness claim of DESIGN.md §11.
 
+The ``faults`` section is the robustness companion (EXPERIMENTS.md
+§Fault tolerance): one gram round per link failure probability
+``flaky`` ∈ {0, 0.05, 0.2} over a P=24 fleet, recording availability
+(fraction of uploads admitted after ≤2 retries) against the measured
+retry surcharge — duplicate upload bytes/joules and backoff seconds
+(``RoundReport.faults``).
+
 Writes ``BENCH_fedround.json`` at the repo root (overridable) so CI and
 future sessions can diff perf trajectories —
 ``scripts/ci_smoke.sh`` asserts the file exists and is well-formed.
@@ -133,6 +140,64 @@ def run_hierarchy(dataset: str = "susy", quick: bool = False,
             "shard_samples": 2, "rows": rows}
 
 
+FLAKY_GRID = [0.0, 0.05, 0.2]
+FAULT_P = 24
+
+
+def run_faults_section(dataset: str = "susy", seed: int = 0) -> dict:
+    """The ``faults`` BENCH section: availability vs retry joules.
+
+    One gram-wire round per link failure probability ``flaky`` ∈
+    {0, 0.05, 0.2} (maxretries=2, deterministic seed): availability is
+    the fraction of the fleet whose upload was admitted (survivors of
+    retry exhaustion), and the retry columns are the measured price of
+    getting there — duplicate upload bytes/joules and backoff wall
+    time (``RoundReport.faults``; EXPERIMENTS.md §Fault tolerance).
+    """
+    pX, pD = _hier_parts(FAULT_P, dataset, seed)
+    rows = []
+    for flaky in FLAKY_GRID:
+        spec = "none" if flaky == 0.0 else \
+            f"flaky={flaky},maxretries=2,seed={seed}"
+        eng = FederationEngine(wire="gram", transport="local",
+                               warmup=True, faults=spec)
+        r = eng.run(pX, pD)
+        f = r.faults
+        admitted = len(r.roles.participants)
+        rows.append({
+            "flaky": flaky, "P": FAULT_P,
+            "availability": round(admitted / FAULT_P, 6),
+            "quarantined": len(f["quarantined"]),
+            "retries": int(sum(f["retried"].values())),
+            "retry_s": round(f["retry_s"], 6),
+            "retry_bytes": f["retry_bytes"],
+            "retry_j": f["retry_j"],
+        })
+        print(f"[bench] faults flaky={flaky}: availability "
+              f"{admitted}/{FAULT_P}, {rows[-1]['retries']} retries, "
+              f"{f['retry_bytes']} retry bytes "
+              f"({f['retry_j']:.2e} J)")
+    return {"wire": "gram", "maxretries": 2, "dataset": dataset,
+            "rows": rows}
+
+
+def run_faults(quick: bool = False, json_path: str | None = None,
+               dataset: str = "susy", seed: int = 0) -> dict:
+    """Standalone entry (``--only faults``): merge the section into an
+    existing ``BENCH_fedround.json`` (the ledger_bench idiom)."""
+    section = run_faults_section(dataset, seed)
+    path = json_path or JSON_DEFAULT
+    payload = {"bench": "fedround", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["faults"] = section
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] merged faults section into {path}")
+    return section
+
+
 def run(scale=None, dataset: str = "susy", quick: bool = False,
         json_path: str | None = None, seed: int = 0):
     (Xtr, ytr), _ = common.load(dataset, scale, seed)
@@ -180,6 +245,7 @@ def run(scale=None, dataset: str = "susy", quick: bool = False,
         "scale": common.DEFAULT_SCALE if scale is None else scale,
         "rows": rows,
         "hierarchy": run_hierarchy(dataset, quick, seed),
+        "faults": run_faults_section(dataset, seed),
     }
     path = json_path or JSON_DEFAULT
     # a fedround run resets the file; benchmarks/ledger_bench.py merges

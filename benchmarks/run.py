@@ -27,8 +27,8 @@ def main():
                     help="write BENCH_fedround.json at the repo root")
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "fig4", "table3", "scenario",
-                             "fedround", "ledger", "privacy", "kernel",
-                             "roofline"],
+                             "fedround", "ledger", "privacy", "faults",
+                             "kernel", "roofline"],
                     help="run a single benchmark")
     args = ap.parse_args()
 
@@ -68,6 +68,11 @@ def main():
     if want("privacy") and (args.json or args.only == "privacy"):
         print("== Privacy overhead + accuracy-vs-eps ==")
         privacy_bench.run(quick=args.quick)
+    if args.only == "faults":
+        # the fedround bench already embeds the faults section; the
+        # standalone entry re-measures and merges it into the JSON
+        print("== Fault tolerance: availability vs retry joules ==")
+        fedround_bench.run_faults(quick=args.quick)
     if want("kernel"):
         print("== Kernel micro-bench ==")
         kernel_bench.run()

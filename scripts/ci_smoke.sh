@@ -50,6 +50,29 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
   --wire gram --transport local --privacy secagg \
   --topology "fanout=3,tiers=2"
 
+# fault-tolerant round runtime end-to-end: injected crash / corrupt /
+# timeout + a tier-aggregator failover, under a 0.7 quorum commit
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
+  --wire gram --transport local --topology "fanout=3,tiers=2" \
+  --quorum 0.7 \
+  --faults "crash@upload:p3,corrupt@wire:p1,timeout:p5,aggfail@tier0:g1,seed=0"
+# journaled bit-exact recovery: die=1 kills the coordinator after its
+# first WAL commit (exit code 3 — the `if` negation keeps set -e from
+# treating the expected death as a CI failure), then the SAME journal
+# resumes and finishes the round
+FAULT_WAL="$(mktemp -u /tmp/ci_wal_XXXX.npz)"
+if python -m repro.launch.fedtrain --dataset susy --scale 2e-4 \
+  --clients 9 --wire gram --transport local \
+  --topology "fanout=3,tiers=2" --journal "$FAULT_WAL" \
+  --faults "aggfail@tier0:g1,die=1"; then
+  echo "ci_smoke: journaled kill run should have exited non-zero" >&2
+  exit 1
+fi
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
+  --wire gram --transport local --topology "fanout=3,tiers=2" \
+  --journal "$FAULT_WAL" --faults "aggfail@tier0:g1"
+rm -f "$FAULT_WAL"
+
 # the event-driven ledger path end-to-end: timeline rounds with a
 # checkpoint save, then a restore-and-continue run (bit-exact state)
 LEDGER_CKPT="$(mktemp -u /tmp/ci_ledger_XXXX.npz)"
@@ -142,10 +165,31 @@ for r in hier["rows"]:
     if r["bit_identical_flat"] is not None:
         assert r["bit_identical_flat"], \
             f"P={r['P']}: tiered solve diverged from the flat fold"
+# ISSUE 8 acceptance: the faults section is well-formed — the
+# availability-vs-retry-joules curve at flaky in {0, 0.05, 0.2}, with
+# a clean baseline (full availability, zero retry cost) and a visibly
+# priced retry surcharge at the lossy end
+flt = d["faults"]
+need_x = {"flaky", "P", "availability", "quarantined", "retries",
+          "retry_s", "retry_bytes", "retry_j"}
+by_flaky = {r["flaky"]: r for r in flt["rows"]}
+assert {0.0, 0.05, 0.2} <= set(by_flaky), sorted(by_flaky)
+for r in flt["rows"]:
+    missing = need_x - set(r)
+    assert not missing, f"faults row missing {missing}"
+    assert 0.0 < r["availability"] <= 1.0, r
+clean = by_flaky[0.0]
+assert clean["availability"] == 1.0 and clean["retries"] == 0 \
+    and clean["retry_j"] == 0.0, f"flaky=0 round not clean: {clean}"
+lossy = by_flaky[0.2]
+assert lossy["retries"] > 0 and lossy["retry_j"] > 0, \
+    f"flaky=0.2 round priced no retries: {lossy}"
+avail = {r["flaky"]: r["availability"] for r in flt["rows"]}
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"ledger delta fracs {led['delta_cpu_frac']}, "
       f"secagg CPU {frac:.2f}x, fused+secagg {fused_frac:.2f}x, "
-      f"acc@eps {curve}, hierarchy peaks {peaks})")
+      f"acc@eps {curve}, hierarchy peaks {peaks}, "
+      f"availability {avail})")
 PY
 
 echo "ci_smoke: OK"

@@ -79,9 +79,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import activations as acts
+from .faults import (CoordinatorKilled, FaultPlan, RoundFaults,
+                     RoundJournal, UploadRejected, empty_faults_report,
+                     inject_corrupt, validate_upload)
 from .ledger import FederationLedger
 from .scenario import ClientRoles, Scenario, Timeline
-from .topology import ExactFold, Topology, simulate_round
+from .topology import ExactFold, Topology, failover, simulate_round
 from .util import add_bias, as_2d
 from .wire import Wire, _WireBase, get_wire
 from ..energy import EnergyMeter, watt_hours
@@ -142,6 +145,12 @@ class RoundReport:
     # hierarchical rounds: tier shape, fold codec, and the simulated
     # latency model's tiered-vs-flat wall/joule comparison
     hierarchy: Optional[dict] = None
+    # fault subsystem bookkeeping (core/faults.py): quarantines with
+    # per-client reasons, retry pricing, tier failovers, journal
+    # recoveries, and the quorum commit — present with all-clear
+    # values on fault-free runs so downstream JSON consumers get a
+    # stable schema
+    faults: dict = dataclasses.field(default_factory=empty_faults_report)
 
     @property
     def client_clocks(self) -> List[float]:
@@ -192,7 +201,8 @@ class FederationEngine:
                  warmup: bool = False, mesh=None, axis: str = "data",
                  dtype: Any = jnp.float32, batch_clients: bool = False,
                  fused: bool = False, privacy: Any = None,
-                 topology: Any = None):
+                 topology: Any = None, faults: Any = None,
+                 quorum: float = 1.0, journal: Optional[str] = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
@@ -212,6 +222,43 @@ class FederationEngine:
         # hierarchical aggregation (core/topology.py, DESIGN.md §11):
         # a parsed Topology routes run() through the tier-tree fold
         self.topology = Topology.parse(topology)
+        # fault subsystem (core/faults.py, DESIGN.md §12): injection
+        # plan, quorum-commit threshold, and the round journal (WAL)
+        self.fault_plan = FaultPlan.parse(faults)
+        if not 0.0 < float(quorum) <= 1.0:
+            raise ValueError(
+                f"quorum={quorum} must be in (0, 1]: it is the "
+                "sample-weighted fraction of uploads that commits "
+                "the round")
+        self.quorum = float(quorum)
+        self.journal_path = journal
+        self._fb: Optional[RoundFaults] = None
+        plan_active = self.fault_plan is not None and \
+            self.fault_plan.active
+        if self.fault_plan is not None and self.fault_plan.aggfail \
+                and self.topology is None:
+            raise ValueError(
+                "the fault plan names aggfail@tier..., but only "
+                "hierarchical rounds (topology=...) have tier "
+                "aggregators to fail")
+        if self.journal_path and self.topology is None:
+            raise ValueError(
+                "journal=... needs a hierarchical round "
+                "(topology=...): the write-ahead log commits "
+                "per-tier aggregates")
+        if self.journal_path and self.transport == "mesh":
+            raise ValueError(
+                "journal: the mesh collective materializes every "
+                "edge aggregate in one dispatch — there is no "
+                "per-tier commit point to log; use the local or "
+                "stream transport")
+        if self.transport == "mesh" and self.topology is None and \
+                (plan_active or self.quorum < 1.0):
+            raise ValueError(
+                "fault injection and quorum commit need per-client "
+                "upload boundaries, but the flat mesh collective is "
+                "all-or-nothing; add topology=... so the mesh folds "
+                "per-edge, or use an in-process transport")
         self._fused_cache = {}
         # imported here, not at module top: privacy/* imports the core
         # package, so a module-level import would cycle through a
@@ -262,12 +309,135 @@ class FederationEngine:
                     (time.perf_counter() - t0)
         return stats
 
+    # ------------------------------------------------------------ faults
+    def _apply_faults(self, roles: ClientRoles, parts_X,
+                      parts_d) -> ClientRoles:
+        """Fault injection + upload admission + quorum commit.
+
+        Runs right after the scenario deals roles and BEFORE anything
+        folds (or the privacy cohort is announced), so every
+        downstream path — loop, batched, fused, stream, hierarchical,
+        plain or masked — sees a cohort that already excludes
+        quarantined clients; removal-before-fold is what makes the
+        committed solve bit-identical to a round that never saw them.
+
+        Retry/timeout/backoff pricing lands on ``roles.delays`` (wall)
+        and the fault ledger's byte/joule counters; the quorum commit
+        moves the slowest sample-weighted tail of the on-time group
+        into ``late``, so the existing ``W_first`` machinery IS the
+        quorum-committed model on every path (late arrivals then
+        merge in revise-style for the final ``W``).
+        """
+        plan, q = self.fault_plan, self.quorum
+        if (plan is None or not plan.active) and q >= 1.0 \
+                and not self.journal_path:
+            return roles
+        fb = RoundFaults(plan, quorum=q)
+        self._fb = fb
+        delays = list(roles.delays)
+        on_time, late = list(roles.on_time), list(roles.late)
+        dropped = set(roles.dropped)
+        m_in = parts_X[0].shape[1] if len(parts_X) else 0
+        c = parts_d[0].shape[1] if len(parts_d) else 1
+        if plan is not None and plan.active:
+            seen: set = set()
+            for cid in list(roles.participants):
+                n_att, ok = plan.attempts(cid)
+                if n_att > 1:
+                    fb.retried[cid] = n_att - 1
+                    wait = plan.backoff_delay(cid, n_att)
+                    fb.retry_s += wait
+                    delays[cid] += wait
+                    if cid not in plan.crash:
+                        # a crashed device transmits nothing; every
+                        # other retry resends the full upload
+                        fb.retry_bytes += (n_att - 1) * \
+                            self._cw().stats_bytes(
+                                int(parts_X[cid].shape[0]), m_in, c)
+                if not ok:
+                    fb.quarantine(cid, "crash" if cid in plan.crash
+                                  else ("timeout" if cid in plan.timeout
+                                        else "flaky"))
+                    continue
+                if cid in plan.corrupt:
+                    st = inject_corrupt(
+                        self.wire.local_stats(parts_X[cid],
+                                              parts_d[cid]),
+                        seed=plan.seed)
+                    try:
+                        validate_upload(cid, st, seen=seen)
+                    except UploadRejected as e:
+                        fb.quarantine(cid, e.reason)
+                    continue
+                seen.add(cid)
+                if cid in plan.replay:
+                    # the client's upload arrives a second time: the
+                    # duplicate is rejected, the first copy folds
+                    try:
+                        validate_upload(
+                            cid, self.wire.local_stats(parts_X[cid],
+                                                       parts_d[cid]),
+                            seen=seen)
+                    except UploadRejected:
+                        fb.replays_rejected.append(cid)
+            # flat-WAN retry pricing; hierarchical rounds re-price the
+            # retries per-link through simulate_round below
+            fb.retry_j = fb.retry_bytes * J_PER_BYTE
+            if fb.quarantined:
+                bad = set(fb.quarantined)
+                on_time = [i for i in on_time if i not in bad]
+                late = [i for i in late if i not in bad]
+                dropped |= bad
+                if not on_time:
+                    raise ValueError(
+                        "the fault plan quarantined every on-time "
+                        "client; a round needs at least one admitted "
+                        "upload to solve")
+        fb.n_committed = len(on_time)
+        fb.committed_ids = list(on_time)
+        if q < 1.0 and len(on_time) > 1:
+            weights = {i: max(int(parts_X[i].shape[0]), 0)
+                       for i in on_time}
+            total = sum(weights.values())
+            # commit the earliest-arriving prefix (ties by client id)
+            # whose sample share reaches the quorum; the rest defer
+            order = sorted(on_time, key=lambda i: (delays[i], i))
+            committed, acc = [], 0
+            for i in order:
+                committed.append(i)
+                acc += weights[i]
+                if total and acc / total >= q:
+                    break
+            deferred = [i for i in order if i not in set(committed)]
+            if deferred:
+                on_time = sorted(committed)
+                late = sorted(deferred) + late
+            fb.committed_frac = (acc / total) if total else 1.0
+            fb.n_committed = len(on_time)
+            fb.n_deferred = len(deferred)
+            fb.committed_ids = list(on_time)
+            fb.deferred_ids = list(deferred)
+        return ClientRoles(on_time=tuple(sorted(on_time)),
+                           late=tuple(late),
+                           dropped=tuple(sorted(dropped)),
+                           delays=tuple(delays))
+
     # ------------------------------------------------------------ entry
     def run(self, parts_X: Sequence, parts_d: Sequence) -> RoundReport:
         """One round over pre-partitioned client data."""
         if len(parts_X) != len(parts_d):
-            raise ValueError("parts_X and parts_d length mismatch")
+            raise ValueError(
+                f"parts_X has {len(parts_X)} client shards but "
+                f"parts_d has {len(parts_d)}: every client needs one "
+                "feature shard and one target shard")
         parts_d = [as_2d(d) for d in parts_d]
+        for i, (X, d) in enumerate(zip(parts_X, parts_d)):
+            nx, nd = int(np.shape(X)[0]), int(d.shape[0])
+            if nx != nd:
+                raise ValueError(
+                    f"client {i}: X has {nx} rows but d has {nd} — "
+                    "features and targets must pair rowwise")
+        self._fb = None
         if self.topology is not None:
             # hierarchical round: the uploading units are the client
             # shards on EVERY transport here — under a topology the
@@ -278,6 +448,8 @@ class FederationEngine:
             report.cpu_seconds = em.cpu_seconds
             if self._priv is not None:
                 report.privacy = self._priv.summary()
+            if self._fb is not None:
+                report.faults = self._fb.report()
             return report
         if self.transport != "mesh":
             # the mesh path's uploading units are the devices on the
@@ -292,6 +464,8 @@ class FederationEngine:
         report.cpu_seconds = em.cpu_seconds
         if self._priv is not None:
             report.privacy = self._priv.summary()
+        if self._fb is not None:
+            report.faults = self._fb.report()
         return report
 
     def fit(self, parts_X: Sequence, parts_d: Sequence) -> jnp.ndarray:
@@ -340,6 +514,12 @@ class FederationEngine:
         if self.transport == "mesh":
             raise ValueError("run_events needs an in-process transport "
                              "(local|stream); mesh rounds are one-shot")
+        if (self.fault_plan is not None and self.fault_plan.active) \
+                or self.quorum < 1.0 or self.journal_path:
+            raise ValueError(
+                "fault injection / quorum / journal apply to one-shot "
+                "rounds (run): the event-driven ledger path models "
+                "churn as explicit timeline events instead")
         timeline = Timeline.parse(timeline) if isinstance(timeline, str) \
             else timeline
         P = len(parts_X)
@@ -527,6 +707,7 @@ class FederationEngine:
 
     def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
         roles = self.scenario.roles(len(parts_X))
+        roles = self._apply_faults(roles, parts_X, parts_d)
         if self._priv is not None:
             # the round's cohort is known up front (a real coordinator
             # announces it): distributed noise shares scale to the
@@ -1122,6 +1303,7 @@ class FederationEngine:
         topo = self.topology
         P = len(parts_X)
         roles = self.scenario.roles(P)
+        roles = self._apply_faults(roles, parts_X, parts_d)
         priv = self._priv
         if priv is not None:
             priv.cohort = len(roles.participants)
@@ -1133,6 +1315,24 @@ class FederationEngine:
                 "transport (local|stream): the mesh's sibling-"
                 "aggregator collective would materialize every group's "
                 "masked pool at once with no tier to cancel pads in")
+        plan, fb = self.fault_plan, self._fb
+        if plan is not None and plan.aggfail:
+            # tier-aggregator failover: the failed aggregator's
+            # children are adopted by a sibling and re-folded there —
+            # the exact/masked codecs are re-tiering invariant, so the
+            # recovered solve bit-matches the no-failure fold
+            for t_, g_ in plan.aggfail:
+                tree, moved = failover(tree, t_, g_)
+                fb.failed_over.append(f"tier{t_}:g{g_}")
+                fb.refolds += moved
+        journal = None
+        if self.journal_path:
+            if mode == "float":
+                raise ValueError(
+                    "the round journal needs an exact tier codec "
+                    "(gram wire, exact or masked fold): float "
+                    "aggregates have no bit-stable digits to commit")
+            journal = RoundJournal(self.journal_path, mode=mode)
         time_by = {i: 0.0 for i in roles.participants}
         if priv is not None and priv.policy.dp:
             # per-row clipping is client-side work, timed per client
@@ -1301,7 +1501,44 @@ class FederationEngine:
                     return acc
                 return leaf
 
-        root = tree.fold(make_leaf(set(roles.on_time)), merge_fn)
+        def journaled(passname, leaf):
+            """WAL wrapper for one tree pass: completed edge
+            aggregates commit their exact digit (or still-masked
+            ring) snapshot before the fold moves on; a resumed round
+            skips straight past recovered edges. ``die=N`` raises
+            :class:`CoordinatorKilled` after the Nth fresh commit is
+            durable — the canonical mid-fold kill."""
+            if journal is None:
+                return leaf
+
+            def wrapped(e, ids):
+                key = f"{passname}-e{e}"
+                hit = journal.lookup(key)
+                if hit is not None:
+                    limbs, jids = hit
+                    self._fb.recovered += 1
+                    agg = sess.from_flat(
+                        np.asarray(limbs, np.int64), jids) \
+                        if mode == "masked" else np.asarray(limbs)
+                    meter.push(size_of(agg))
+                    return agg
+                agg = leaf(e, ids)
+                if agg is not None:
+                    if mode == "masked":
+                        journal.commit(key, sess.to_flat(agg),
+                                       ids=agg.ids)
+                    else:
+                        journal.commit(key, np.asarray(agg))
+                    if plan is not None and \
+                            0 < plan.die <= journal.commits:
+                        raise CoordinatorKilled(journal.commits,
+                                                journal.path)
+                return agg
+
+            return wrapped
+
+        root = tree.fold(journaled("on", make_leaf(set(roles.on_time))),
+                         merge_fn)
         if root is None:
             # every on-time shard was empty: the round still solves,
             # over the exactly-zero aggregate
@@ -1328,7 +1565,8 @@ class FederationEngine:
             # the late joiners fold through their own tree pass and
             # merge in at the root (paper §3.2, re-tiered)
             W_first = solve_root(root, salt=1)
-            late_root = tree.fold(make_leaf(set(roles.late)), merge_fn)
+            late_root = tree.fold(
+                journaled("late", make_leaf(set(roles.late))), merge_fn)
             if late_root is not None:
                 root = merge_fn(tree.tiers, root, late_root)
         W = solve_root(root, salt=0)
@@ -1343,11 +1581,21 @@ class FederationEngine:
                 for i in roles.participants}
         client_ready = {i: time_by.get(i, 0.0) + roles.delays[i]
                         for i in roles.participants}
+        retries = {i: n for i, n in fb.retried.items()
+                   if i in client_ready} if fb is not None else {}
         sim = simulate_round(tree, topo, client_ready=client_ready,
                              client_bytes=client_bytes,
                              agg_bytes=agg_bytes,
                              merge_cost=merge_s / max(merges, 1),
-                             j_per_byte=J_PER_BYTE)
+                             j_per_byte=J_PER_BYTE,
+                             retries=retries or None,
+                             refolds=fb.refolds if fb is not None
+                             else 0)
+        if fb is not None:
+            # per-link pricing supersedes _apply_faults' flat-WAN
+            # estimate: retried client uploads ride the LAN tier here
+            fb.retry_bytes = int(sim["retry_bytes"])
+            fb.retry_j = float(sim["retry_j"])
         hierarchy = {"fanout": topo.fanout, "tiers": topo.tiers,
                      "mode": mode, "n_groups": tree.n_edges,
                      "agg_bytes": int(agg_bytes),

@@ -1,0 +1,525 @@
+"""Fault injection, quarantine, and journaled recovery for one round.
+
+The paper's one-round promise only survives production if the single
+round survives the real world: crashed uploads, flaky radio links,
+dying tier aggregators, corrupted payloads, replayed packets, and a
+coordinator that gets killed mid-fold.  This module is the fault
+subsystem the engine threads through every transport:
+
+``FaultPlan``
+    A deterministic injection schedule parsed Scenario-style::
+
+        faults=crash@upload:p3,corrupt@wire:p7,aggfail@tier1:g0,
+               timeout:p5,replay:p4,flaky=0.1,seed=0
+
+    Event tokens name a fault class and a client (or aggregator)
+    range; ``flaky=q`` gives every upload attempt an independent
+    failure probability.  All draws are keyed on ``(seed, cid,
+    attempt)`` so the same plan injects the same faults every run —
+    fault-injection tests are reproducible, and a journal resume sees
+    the identical failure pattern.
+
+``validate_upload`` / ``UploadRejected``
+    The coordinator-side admission check: non-finite statistics,
+    dtype/structure mismatches against the round template, int64
+    limb-headroom violations, and duplicate (replayed) client ids are
+    rejected with a typed reason before anything enters the fold.
+    On the masked path replays are also caught structurally —
+    ``SecAggSession.merge_signed`` refuses overlapping id sets.
+
+``RoundFaults``
+    Per-round bookkeeping (quarantines, retries, failovers, journal
+    recoveries, quorum commit) rendered as the stable
+    ``RoundReport.faults`` dict — present-but-empty on fault-free
+    runs so downstream JSON consumers never branch on key existence.
+
+``RoundJournal``
+    A write-ahead log of committed per-tier aggregates (exact digit
+    or masked-ring snapshots) persisted atomically through
+    ``checkpoint/ckpt.py``; a coordinator killed mid-fold
+    (``CoordinatorKilled``, injected via ``die=N``) resumes from the
+    last committed tier aggregate and finishes bit-identically to an
+    uninterrupted round.
+
+Exactness is the design constraint throughout: quarantined clients
+are removed *before* any fold (or evicted post-hoc via the ledger's
+exact ``subtract``), failover re-folds ride the re-tiering-invariant
+exact codec, and the journal commits the very digits the fold would
+have produced — so every recovery path bit-matches the no-failure
+round over the same cohort.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint.ckpt import load_flat, save_checkpoint
+
+__all__ = [
+    "CoordinatorKilled",
+    "FaultPlan",
+    "RoundFaults",
+    "RoundJournal",
+    "UploadRejected",
+    "empty_faults_report",
+    "inject_corrupt",
+    "validate_upload",
+]
+
+# int64 limb magnitudes at or beyond this bound would make the lazy
+# base-2^32 carry overflow on the next add; secagg keeps limbs far
+# below it (see privacy/limbs._CARRY_THRESHOLD), so anything larger
+# in an upload is corruption, not data
+_LIMB_HEADROOM = np.int64(1) << 62
+
+
+class UploadRejected(ValueError):
+    """A client upload failed admission: quarantined, never folded."""
+
+    def __init__(self, cid: int, reason: str, detail: str = ""):
+        self.cid = int(cid)
+        self.reason = str(reason)
+        msg = f"upload from client {self.cid} rejected ({self.reason})"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+class CoordinatorKilled(RuntimeError):
+    """Injected coordinator death (``die=N``) after N journal commits.
+
+    The journal entry that triggered the kill is already durable on
+    disk — rerunning with the same journal resumes past it.
+    """
+
+    def __init__(self, commits: int, path: str):
+        self.commits = int(commits)
+        self.path = str(path)
+        super().__init__(
+            f"coordinator killed after {self.commits} journal "
+            f"commit(s); rerun with the same journal ({self.path}) "
+            "to resume bit-identically")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan grammar — Scenario/Timeline-style tokens
+# ---------------------------------------------------------------------------
+
+# client-targeted events: crash@upload:p3, corrupt@wire:p0-p4,
+# timeout:p5, replay:p4   (ranges are inclusive, 'p' optional)
+_CLIENT_RE = re.compile(
+    r"^(?P<kind>crash@upload|corrupt@wire|timeout|replay)"
+    r":p?(?P<lo>\d+)(?:-p?(?P<hi>\d+))?$")
+# aggregator events: aggfail@tier1:g0
+_AGG_RE = re.compile(r"^aggfail@tier(?P<t>\d+):g(?P<g>\d+)$")
+_KV_KEYS = ("flaky", "seed", "maxretries", "backoff", "jitter", "die")
+_GRAMMAR = ("crash@upload:pN[-pM], corrupt@wire:pN[-pM], "
+            "timeout:pN[-pM], replay:pN[-pM], aggfail@tierK:gM, "
+            "flaky=, seed=, maxretries=, backoff=, jitter=, die=")
+
+
+def _ids(m: "re.Match[str]") -> Tuple[int, ...]:
+    lo = int(m.group("lo"))
+    hi = int(m.group("hi")) if m.group("hi") else lo
+    if hi < lo:
+        raise ValueError(f"bad faults range p{lo}-p{hi}: hi < lo")
+    return tuple(range(lo, hi + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic per-round fault-injection schedule.
+
+    Client-targeted events:
+
+    - ``crash`` — the device dies; nothing ever arrives.  The
+      coordinator retries ``maxretries`` times (priced in backoff
+      wall time but zero bytes — a dead radio transmits nothing),
+      then quarantines the client.
+    - ``timeout`` — the first upload attempt times out; the retry
+      succeeds.  Backoff is added to the client's delay and the
+      duplicate upload is priced in bytes/joules.
+    - ``corrupt`` — the payload arrives with non-finite statistics;
+      ``validate_upload`` rejects it and the client is quarantined
+      (no retry: a deterministic corruption would recur).
+    - ``replay`` — the client's upload arrives twice; the duplicate
+      is rejected, the first copy still folds.
+    - ``flaky=q`` — every upload attempt independently fails with
+      probability q (deterministic per ``(seed, cid, attempt)``);
+      clients that exhaust ``maxretries`` are quarantined.
+
+    Aggregator events: ``aggfail@tierK:gM`` kills that tier
+    aggregator — its children are reassigned to a sibling and
+    re-folded (bit-identical under the exact codec).
+
+    ``die=N`` kills the coordinator after N round-journal commits
+    (see :class:`RoundJournal`).
+    """
+
+    crash: Tuple[int, ...] = ()
+    corrupt: Tuple[int, ...] = ()
+    timeout: Tuple[int, ...] = ()
+    replay: Tuple[int, ...] = ()
+    aggfail: Tuple[Tuple[int, int], ...] = ()
+    flaky: float = 0.0
+    seed: int = 0
+    maxretries: int = 3
+    backoff: float = 0.05
+    jitter: float = 0.5
+    die: int = 0
+
+    @classmethod
+    def parse(cls, spec: Any) -> Optional["FaultPlan"]:
+        """``FaultPlan.parse("crash@upload:p3,flaky=0.1")`` etc.
+
+        Accepts an existing plan (pass-through), None/""/"none" (no
+        plan), or a comma-separated token string with an optional
+        leading ``faults=``.  Unknown tokens raise a ValueError
+        naming the offending token, like the Scenario grammar.
+        """
+        if spec is None or isinstance(spec, cls):
+            return spec
+        text = str(spec).strip()
+        if text.startswith("faults="):
+            text = text[len("faults="):]
+        if not text or text.lower() == "none":
+            return None
+        kinds: Dict[str, List[int]] = {
+            "crash@upload": [], "corrupt@wire": [],
+            "timeout": [], "replay": []}
+        aggfail: List[Tuple[int, int]] = []
+        kv: Dict[str, Any] = {}
+        for raw in text.split(","):
+            token = raw.strip()
+            if not token:
+                continue
+            m = _CLIENT_RE.match(token)
+            if m:
+                kinds[m.group("kind")].extend(_ids(m))
+                continue
+            m = _AGG_RE.match(token)
+            if m:
+                aggfail.append((int(m.group("t")), int(m.group("g"))))
+                continue
+            if "=" in token:
+                key, _, val = token.partition("=")
+                key = key.strip()
+                if key not in _KV_KEYS:
+                    raise ValueError(
+                        f"bad faults item {token!r} "
+                        f"(known: {_GRAMMAR})")
+                try:
+                    kv[key] = (float(val) if key
+                               in ("flaky", "backoff", "jitter")
+                               else int(val))
+                except ValueError:
+                    raise ValueError(
+                        f"bad faults value in {token!r}") from None
+                continue
+            raise ValueError(
+                f"bad faults item {token!r} (known: {_GRAMMAR})")
+        plan = cls(crash=tuple(sorted(set(kinds["crash@upload"]))),
+                   corrupt=tuple(sorted(set(kinds["corrupt@wire"]))),
+                   timeout=tuple(sorted(set(kinds["timeout"]))),
+                   replay=tuple(sorted(set(kinds["replay"]))),
+                   aggfail=tuple(aggfail), **kv)
+        plan.validate()
+        return plan
+
+    def validate(self) -> None:
+        if not 0.0 <= self.flaky < 1.0:
+            raise ValueError(
+                f"bad faults value flaky={self.flaky}: need a "
+                "failure probability in [0, 1)")
+        if self.maxretries < 0:
+            raise ValueError(
+                f"bad faults value maxretries={self.maxretries}")
+        if self.backoff < 0:
+            raise ValueError(f"bad faults value backoff={self.backoff}")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError(
+                f"bad faults value jitter={self.jitter}: the "
+                "backoff jitter fraction lives in [0, 1]")
+        if self.die < 0:
+            raise ValueError(f"bad faults value die={self.die}")
+
+    @property
+    def active(self) -> bool:
+        return bool(self.crash or self.corrupt or self.timeout
+                    or self.replay or self.aggfail
+                    or self.flaky > 0.0 or self.die > 0)
+
+    # -- deterministic draws ------------------------------------------------
+
+    def attempts(self, cid: int) -> Tuple[int, bool]:
+        """(number of upload attempts, did any succeed) for a client.
+
+        Crash clients burn every retry and never succeed.  A timeout
+        forces the first attempt to fail; ``flaky`` gives every
+        attempt an independent failure draw keyed on
+        ``(seed, cid, attempt)``.
+        """
+        cid = int(cid)
+        if cid in self.crash:
+            return 1 + self.maxretries, False
+        forced = 1 if cid in self.timeout else 0
+        made = 0
+        while made <= self.maxretries:
+            attempt = made
+            made += 1
+            if forced > 0:
+                forced -= 1
+                continue
+            if self.flaky > 0.0:
+                u = np.random.default_rng(
+                    (self.seed, 7919, cid, attempt)).random()
+                if u < self.flaky:
+                    continue
+            return made, True
+        return made, False
+
+    def backoff_delay(self, cid: int, n_attempts: int) -> float:
+        """Total exponential-backoff wall time before the last attempt.
+
+        Each failed attempt ``a`` waits ``backoff * 2**a`` scaled by
+        a deterministic jitter draw in ``[1, 1 + jitter]``.
+        """
+        total = 0.0
+        for a in range(int(n_attempts) - 1):
+            u = np.random.default_rng(
+                (self.seed, 104729, int(cid), a)).random()
+            total += self.backoff * (2.0 ** a) * (1.0 + self.jitter * u)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Upload admission
+# ---------------------------------------------------------------------------
+
+def _leaves(stats: Any) -> List[np.ndarray]:
+    if hasattr(stats, "_fields"):  # ClientStats / GramStats NamedTuple
+        vals = list(stats)
+    elif isinstance(stats, (tuple, list)):
+        vals = list(stats)
+    else:
+        vals = [stats]
+    return [np.asarray(v) for v in vals]
+
+
+def validate_upload(cid: int, stats: Any, *,
+                    template: Any = None,
+                    seen: Optional[set] = None) -> None:
+    """Admission check for one client upload; raises UploadRejected.
+
+    Checks, in order: duplicate/replayed client id (against ``seen``),
+    structural mismatch vs ``template`` (leaf count, dtype, rank —
+    not exact shapes, since e.g. the SVD rank dimension legitimately
+    varies per client), non-finite float statistics, and int64
+    limb-headroom violations.
+    """
+    cid = int(cid)
+    if seen is not None and cid in seen:
+        raise UploadRejected(cid, "duplicate",
+                             "client id already folded this round "
+                             "(replayed upload)")
+    leaves = _leaves(stats)
+    if template is not None:
+        ref = _leaves(template)
+        if len(leaves) != len(ref):
+            raise UploadRejected(
+                cid, "structure",
+                f"{len(leaves)} stat leaves, expected {len(ref)}")
+        for k, (a, b) in enumerate(zip(leaves, ref)):
+            if a.dtype != b.dtype:
+                raise UploadRejected(
+                    cid, "dtype",
+                    f"leaf {k} is {a.dtype}, expected {b.dtype}")
+            if a.ndim != b.ndim:
+                raise UploadRejected(
+                    cid, "shape",
+                    f"leaf {k} has rank {a.ndim}, expected {b.ndim}")
+    for k, a in enumerate(leaves):
+        if np.issubdtype(a.dtype, np.floating):
+            if not np.all(np.isfinite(a)):
+                raise UploadRejected(
+                    cid, "non-finite",
+                    f"leaf {k} carries NaN/Inf statistics")
+        elif a.dtype == np.int64:
+            if a.size and int(np.abs(a).max()) >= int(_LIMB_HEADROOM):
+                raise UploadRejected(
+                    cid, "limb-headroom",
+                    f"leaf {k} limb magnitude >= 2^62 would overflow "
+                    "the lazy base-2^32 carry")
+    if seen is not None:
+        seen.add(cid)
+
+
+def inject_corrupt(stats: Any, seed: int = 0) -> Any:
+    """Scribble NaN into one float leaf of a stats tuple (test fault)."""
+    leaves = _leaves(stats)
+    rng = np.random.default_rng((int(seed), 15485863))
+    float_ix = [k for k, a in enumerate(leaves)
+                if np.issubdtype(a.dtype, np.floating) and a.size]
+    if not float_ix:  # pragma: no cover - all wires carry float leaves
+        return stats
+    k = int(float_ix[int(rng.integers(len(float_ix)))])
+    bad = np.array(leaves[k], copy=True)
+    flat = bad.reshape(-1)
+    flat[int(rng.integers(flat.size))] = np.nan
+    leaves[k] = bad
+    if hasattr(stats, "_fields"):
+        return type(stats)(*leaves)
+    return type(stats)(leaves) if isinstance(stats, (tuple, list)) \
+        else bad
+
+
+# ---------------------------------------------------------------------------
+# Per-round bookkeeping
+# ---------------------------------------------------------------------------
+
+def empty_faults_report() -> Dict[str, Any]:
+    """The stable ``RoundReport.faults`` schema, all-clear values."""
+    return {
+        "quarantined": {},
+        "retried": {},
+        "failed_over": [],
+        "recovered": 0,
+        "replays_rejected": [],
+        "retry_s": 0.0,
+        "retry_bytes": 0,
+        "retry_j": 0.0,
+        "quorum": {"target": 1.0, "committed_frac": 1.0,
+                   "n_committed": 0, "n_deferred": 0,
+                   "committed": [], "deferred": []},
+    }
+
+
+class RoundFaults:
+    """Mutable per-round fault ledger; ``report()`` freezes the dict."""
+
+    def __init__(self, plan: Optional[FaultPlan],
+                 quorum: float = 1.0):
+        self.plan = plan
+        self.quorum_target = float(quorum)
+        self.quarantined: Dict[int, str] = {}
+        self.retried: Dict[int, int] = {}
+        self.failed_over: List[str] = []
+        self.refolds = 0
+        self.recovered = 0
+        self.replays_rejected: List[int] = []
+        self.retry_s = 0.0
+        self.retry_bytes = 0
+        self.retry_j = 0.0
+        self.committed_frac = 1.0
+        self.n_committed = 0
+        self.n_deferred = 0
+        self.committed_ids: List[int] = []
+        self.deferred_ids: List[int] = []
+
+    def quarantine(self, cid: int, reason: str) -> None:
+        self.quarantined[int(cid)] = str(reason)
+
+    def report(self) -> Dict[str, Any]:
+        out = empty_faults_report()
+        out["quarantined"] = {int(k): v
+                              for k, v in sorted(self.quarantined.items())}
+        out["retried"] = {int(k): int(v)
+                          for k, v in sorted(self.retried.items())}
+        out["failed_over"] = list(self.failed_over)
+        out["recovered"] = int(self.recovered)
+        out["replays_rejected"] = sorted(int(c)
+                                         for c in self.replays_rejected)
+        out["retry_s"] = float(self.retry_s)
+        out["retry_bytes"] = int(self.retry_bytes)
+        out["retry_j"] = float(self.retry_j)
+        out["quorum"] = {
+            "target": float(self.quorum_target),
+            "committed_frac": float(self.committed_frac),
+            "n_committed": int(self.n_committed),
+            "n_deferred": int(self.n_deferred),
+            "committed": sorted(int(c) for c in self.committed_ids),
+            "deferred": sorted(int(c) for c in self.deferred_ids),
+        }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Round journal (write-ahead log)
+# ---------------------------------------------------------------------------
+
+class RoundJournal:
+    """A WAL of committed tier aggregates with bit-exact resume.
+
+    Each edge aggregate the hierarchical fold completes is committed
+    as its exact digit snapshot (int64 dyadic limbs for the exact
+    codec; the still-masked flat ring image plus participant ids for
+    the masked codec — so the log on disk leaks nothing an upload
+    didn't).  Commits rewrite the npz atomically via
+    ``checkpoint.ckpt.save_checkpoint`` (tmp + ``os.replace``), so a
+    kill can lose at most the in-flight edge, never corrupt the log.
+
+    On construction an existing file is loaded; ``lookup`` hits let
+    the resumed fold skip straight past recovered edges.  ``commits``
+    counts only *new* commits this run — ``die=N`` kills after the
+    Nth fresh commit, so a resume with the same plan makes progress.
+    """
+
+    def __init__(self, path: str, mode: str):
+        self.path = str(path)
+        self.mode = str(mode)
+        self.commits = 0
+        self._entries: Dict[str, Dict[str, Optional[np.ndarray]]] = {}
+        if os.path.exists(self.path):
+            self._load()
+
+    def _load(self) -> None:
+        flat = load_flat(self.path)
+        stored = str(np.asarray(flat.get("meta/mode", "?")).item())
+        if stored != self.mode:
+            raise ValueError(
+                f"journal {self.path} was written by a {stored!r} "
+                f"codec round; this round folds {self.mode!r} — "
+                "refusing to mix digit formats")
+        for key, val in flat.items():
+            if not key.startswith("entry/"):
+                continue
+            _, name, field = key.split("/", 2)
+            self._entries.setdefault(name, {})[field] = np.asarray(val)
+
+    def lookup(self, key: str):
+        """-> (limbs, ids-or-None) for a committed edge, else None."""
+        ent = self._entries.get(key)
+        if ent is None or "limbs" not in ent:
+            return None
+        ids = ent.get("ids")
+        return ent["limbs"], (None if ids is None
+                              else frozenset(int(i) for i in ids))
+
+    def commit(self, key: str, limbs: np.ndarray,
+               ids: Optional[frozenset] = None) -> None:
+        if "/" in key:
+            raise ValueError(f"journal key {key!r} may not contain '/'")
+        ent: Dict[str, Optional[np.ndarray]] = {
+            "limbs": np.asarray(limbs)}
+        if ids is not None:
+            ent["ids"] = np.asarray(sorted(int(i) for i in ids),
+                                    dtype=np.int64)
+        self._entries[key] = ent
+        self._persist()
+        self.commits += 1
+
+    def _persist(self) -> None:
+        flat: Dict[str, np.ndarray] = {
+            "meta/mode": np.asarray(self.mode)}
+        for name, ent in self._entries.items():
+            for field, val in ent.items():
+                if val is not None:
+                    flat[f"entry/{name}/{field}"] = val
+        save_checkpoint(self.path, flat)
+
+    def __len__(self) -> int:
+        return len(self._entries)

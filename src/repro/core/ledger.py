@@ -138,6 +138,9 @@ class FederationLedger:
         self.departed: set = set()     # left and not rejoined — a
         # continued run must not auto-readmit them (their departure was
         # an explicit event, possibly a deletion request)
+        self.evicted: Dict[int, str] = {}  # post-hoc quarantines by
+        # reason (core/faults.py) — in-memory bookkeeping only, not
+        # checkpointed (restore of an older ledger stays valid)
         self.tick = -1                 # last applied tick (-1 = fresh)
         self.n_events = 0
         self.subtractable = hasattr(self.wire, "subtract")
@@ -189,6 +192,16 @@ class FederationLedger:
             raise ValueError(f"leave of client {cid}: not active")
         self._apply(self.registry.pop(cid), -1)
         self.departed.add(cid)
+
+    def evict(self, cid: int, reason: str = "quarantined") -> None:
+        """Post-hoc quarantine: remove a client whose upload turned
+        out to be bad AFTER it folded. On the exact path the signed
+        downdate makes the next snapshot — and so ``W`` — bit-identical
+        to a ledger that never folded the client (the unlearning
+        guarantee, property-tested in tests/test_faults.py); the
+        reason is kept in :attr:`evicted` for the fault report."""
+        self.leave(cid)
+        self.evicted[int(cid)] = str(reason)
 
     def revise(self, cid: int, stats) -> None:
         if cid not in self.registry:

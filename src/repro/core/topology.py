@@ -249,6 +249,50 @@ class TierTree:
         return node(self.tiers - 1, 0)
 
 
+# --------------------------------------------------------------- failover
+def failover(tree: TierTree, tier: int, group: int
+             ) -> Tuple[TierTree, int]:
+    """Reassign a failed aggregator's children to a sibling.
+
+    ``aggfail@tier{tier}:g{group}`` recovery: the dead aggregator's
+    group empties (an empty group folds to ``None``, which
+    :meth:`TierTree.fold` already skips — no parent index remapping)
+    and its children are adopted by the adjacent sibling at the same
+    tier, which re-folds them. Because the exact codec's tier adds are
+    order-independent integer ring sums, the re-tiered fold decodes to
+    the bit-identical aggregate (PR 7's re-tiering invariance); the
+    masked codec's boundary-pad recovery depends only on the
+    participant id set, which failover never changes.
+
+    Returns ``(new_tree, n_children_moved)`` — the move count prices
+    the re-folded uplinks in :func:`simulate_round`.
+    """
+    if not 0 <= tier < tree.tiers:
+        raise ValueError(
+            f"aggfail@tier{tier}:g{group}: the tree has tiers "
+            f"0..{tree.tiers - 1}")
+    level = tree.levels[tier]
+    if not 0 <= group < len(level):
+        raise ValueError(
+            f"aggfail@tier{tier}:g{group}: tier {tier} has groups "
+            f"0..{len(level) - 1}")
+    if len(level) < 2:
+        raise ValueError(
+            f"aggfail@tier{tier}:g{group}: the aggregator has no "
+            "sibling at its tier to adopt its children (a dead root "
+            "means restarting the round)")
+    sibling = group + 1 if group + 1 < len(level) else group - 1
+    moved = level[group]
+    new_level = list(level)
+    new_level[group] = ()
+    new_level[sibling] = tuple(new_level[sibling]) + tuple(moved)
+    levels = list(tree.levels)
+    levels[tier] = tuple(new_level)
+    new_tree = TierTree(levels=tuple(levels))
+    new_tree.validate()
+    return new_tree, len(moved)
+
+
 # ------------------------------------------------------------ exact fold
 class ExactFold:
     """Tier-exchange codec for the exact dyadic-integer group fold.
@@ -315,7 +359,9 @@ def simulate_round(tree: TierTree, topo: Topology, *,
                    client_ready: Dict[int, float],
                    client_bytes: Dict[int, int],
                    agg_bytes: int, merge_cost: float = 0.0,
-                   j_per_byte: float = 2e-7) -> dict:
+                   j_per_byte: float = 2e-7,
+                   retries: Optional[Dict[int, int]] = None,
+                   refolds: int = 0) -> dict:
     """Simulated wall-clock + uplink joules: tiered vs flat, same round.
 
     ``client_ready`` maps each participant to the second its statistics
@@ -328,9 +374,20 @@ def simulate_round(tree: TierTree, topo: Topology, *,
     aggregates, with client uploads on the cheap LAN tier. Joules price
     every uplink byte through the Savazzi-style J/byte radio model
     (LAN bytes at ``lan_factor`` of the WAN rate).
+
+    ``retries`` maps a client to its count of *extra* upload attempts
+    (fault plan retry/timeout): each resends the full upload over the
+    client's own link, so its edge ingests (1 + retries) × bytes and
+    the duplicate bytes are priced into the joule totals —
+    retransmission is pure energy cost, the fault model's headline
+    number. ``refolds`` counts child aggregates re-sent to a sibling
+    after a tier-aggregator failover, each one more WAN agg uplink.
+    The retry/refold surcharge is reported separately
+    (``retry_bytes``/``retry_j``) as well as folded into the totals.
     """
-    j = {"tiered": 0.0, "flat": 0.0}
-    b = {"tiered": 0, "flat": 0}
+    retries = retries or {}
+    j = {"tiered": 0.0, "flat": 0.0, "retry": 0.0}
+    b = {"tiered": 0, "flat": 0, "retry": 0}
 
     def edge_ready(e):
         ids = [i for i in tree.levels[0][e] if i in client_ready]
@@ -339,10 +396,15 @@ def simulate_round(tree: TierTree, topo: Topology, *,
         arrive, ingest = 0.0, 0.0
         for i in ids:
             rtt, bw, jf = topo.link(0, e, i)
+            sends = 1 + retries.get(i, 0)
             arrive = max(arrive, client_ready[i] + rtt)
-            ingest += client_bytes[i] / bw
-            j["tiered"] += client_bytes[i] * j_per_byte * jf
-            b["tiered"] += client_bytes[i]
+            ingest += sends * client_bytes[i] / bw
+            j["tiered"] += sends * client_bytes[i] * j_per_byte * jf
+            b["tiered"] += sends * client_bytes[i]
+            if sends > 1:
+                extra = (sends - 1) * client_bytes[i]
+                j["retry"] += extra * j_per_byte * jf
+                b["retry"] += extra
         return arrive + ingest + len(ids) * merge_cost
 
     def node_ready(level, idx):
@@ -362,20 +424,32 @@ def simulate_round(tree: TierTree, topo: Topology, *,
         return arrive + ingest + n * merge_cost if n else None
 
     tiered = node_ready(tree.tiers - 1, 0)
+    if tiered is not None and refolds:
+        # failover re-folds: each moved child's aggregate is re-sent
+        # over one more WAN uplink into the adopting sibling
+        extra = refolds * agg_bytes
+        tiered += refolds * (agg_bytes / topo.bw + merge_cost)
+        j["tiered"] += extra * j_per_byte
+        b["tiered"] += extra
+        j["retry"] += extra * j_per_byte
+        b["retry"] += extra
     # flat baseline: every client on its own WAN link into ONE receiver
+    # (retried uploads resend over the same WAN link)
     arrive, ingest = 0.0, 0.0
     for i, t in client_ready.items():
         rtt, bw, _ = topo.link(1, 0, i)
+        sends = 1 + retries.get(i, 0)
         arrive = max(arrive, t + rtt)
-        ingest += client_bytes[i] / bw
-        j["flat"] += client_bytes[i] * j_per_byte
-        b["flat"] += client_bytes[i]
+        ingest += sends * client_bytes[i] / bw
+        j["flat"] += sends * client_bytes[i] * j_per_byte
+        b["flat"] += sends * client_bytes[i]
     flat = arrive + ingest + len(client_ready) * merge_cost \
         if client_ready else None
     return {
         "sim_wall_tiered": tiered, "sim_wall_flat": flat,
         "uplink_j_tiered": j["tiered"], "uplink_j_flat": j["flat"],
         "bytes_tiered": b["tiered"], "bytes_flat": b["flat"],
+        "retry_bytes": b["retry"], "retry_j": j["retry"],
         "n_participants": len(client_ready),
         "n_aggregators": tree.n_aggregators,
     }

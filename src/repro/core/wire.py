@@ -121,6 +121,20 @@ class _WireBase:
             items = nxt
         return items[0]
 
+    def validate_stats(self, stats) -> None:
+        """Coordinator-side admission check for one upload: reject
+        non-finite statistics before anything folds. The ledger's
+        ``_validate`` and the fault subsystem's ``validate_upload``
+        both route through this hook, so a wire with non-float stats
+        (the masked wire's ring elements) can override it with its
+        own invariants."""
+        for leaf in jax.tree_util.tree_flatten(stats)[0]:
+            arr = np.asarray(jax.device_get(leaf))
+            if np.issubdtype(arr.dtype, np.floating) and \
+                    not np.all(np.isfinite(arr)):
+                raise ValueError(
+                    "non-finite statistic cannot enter the ledger")
+
     def _k(self, c: int) -> int:
         # per-output F stacks (k == c) except the shared-F identity path
         return 1 if acts.get(self.act).name == "identity" else c

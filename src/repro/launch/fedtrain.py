@@ -10,6 +10,13 @@ and Wh (process-CPU metered) — plus the wire's upload bytes.
 --clients 1000 --partition pathological --wire gram --transport stream
 --scenario "dropout=0.3,late_join=0.2"``
 
+``--faults "crash@upload:p3,flaky=0.1" --quorum 0.9 --journal wal.npz``
+runs the round through the fault subsystem (``core/faults.py``):
+injected failures are detected, retried/quarantined and priced, the
+round commits at a sample-weighted quorum, and hierarchical folds
+journal per-tier aggregates so a killed coordinator resumes
+bit-identically (exit code 3 signals an injected ``die=N`` kill).
+
 ``--timeline "events=leave@t2:p3,revise@t3:p0"`` switches to the
 event-driven multi-round path (``FederationEngine.run_events`` over a
 ``FederationLedger``): one solve per tick, only changed clients
@@ -27,6 +34,7 @@ import numpy as np
 
 from repro.core import predict_labels
 from repro.core.engine import FederationEngine, TRANSPORTS
+from repro.core.faults import CoordinatorKilled
 from repro.core.ledger import FederationLedger
 from repro.core.scenario import Scenario, Timeline
 from repro.data import partition, synthetic
@@ -98,6 +106,26 @@ def main():
     ap.add_argument("--clip", type=float, default=1.0,
                     help="per-row L2 clip bound applied client-side "
                          "before statistics (dp modes)")
+    ap.add_argument("--faults", default="none",
+                    help='fault-injection plan, e.g. '
+                         '"crash@upload:p3,corrupt@wire:p7,'
+                         'aggfail@tier1:g0,timeout:p5,replay:p4,'
+                         'flaky=0.1,seed=0" — deterministic crashes, '
+                         'corrupted/replayed uploads, flaky links with '
+                         'retry+backoff, and tier-aggregator failover '
+                         '(see core/faults.py)')
+    ap.add_argument("--quorum", type=float, default=1.0,
+                    help="commit the round once this sample-weighted "
+                         "fraction of on-time uploads has folded; "
+                         "stragglers merge in revise-style after the "
+                         "committed first solve (default 1.0 = wait "
+                         "for everyone)")
+    ap.add_argument("--journal", default=None,
+                    help="round-journal (WAL) path for hierarchical "
+                         "rounds: per-tier aggregates commit as exact "
+                         "digit snapshots; a coordinator killed "
+                         "mid-fold resumes from this file "
+                         "bit-identically (requires --topology)")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -108,6 +136,17 @@ def main():
             "ledger's delta rounds re-solve from its registry, which is "
             "inherently resident at the coordinator — there is no tier "
             "tree to fold it through; drop one of the two")
+    if args.timeline is not None and (
+            args.faults not in (None, "none", "") or args.quorum < 1.0
+            or args.journal):
+        raise SystemExit(
+            "[fedtrain] --faults/--quorum/--journal are incompatible "
+            "with --timeline: the event-driven ledger path models "
+            "churn as explicit timeline events; drop one of the two")
+    if args.journal and args.topology in (None, "none", ""):
+        raise SystemExit(
+            "[fedtrain] --journal needs --topology: the write-ahead "
+            "log commits per-tier aggregates of the hierarchical fold")
 
     scenario = Scenario.parse(args.scenario)
     # --partition/--seed are the defaults; an explicit scenario key wins
@@ -129,7 +168,9 @@ def main():
                               chunks=args.chunks, warmup=True,
                               batch_clients=args.batch_clients,
                               fused=args.fused, privacy=policy,
-                              topology=args.topology)
+                              topology=args.topology,
+                              faults=args.faults, quorum=args.quorum,
+                              journal=args.journal)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
@@ -139,7 +180,14 @@ def main():
         run_timeline(args, engine, Xtr, ytr, Xte, yte, P)
         return
 
-    report = engine.run_dataset(Xtr, ytr, P, n_classes=2)
+    try:
+        report = engine.run_dataset(Xtr, ytr, P, n_classes=2)
+    except CoordinatorKilled as e:
+        # injected mid-fold death (faults die=N): the journal already
+        # holds every committed tier aggregate — a rerun with the same
+        # --journal resumes and finishes bit-identically
+        print(f"[fedtrain] {e}")
+        raise SystemExit(3)
     roles = report.roles
     pred = predict_labels(report.W, Xte, act="logistic")
     acc = float((np.asarray(pred) == yte).mean())
@@ -157,6 +205,39 @@ def main():
           f"{report.dispatches}")
     _print_privacy(report)
     _print_hierarchy(report)
+    _print_faults(report)
+
+
+def _print_faults(report):
+    f = report.faults
+    quorum = f["quorum"]
+    eventful = (f["quarantined"] or f["retried"] or f["failed_over"]
+                or f["recovered"] or f["replays_rejected"]
+                or quorum["target"] < 1.0)
+    if not eventful:
+        return
+    line = f"[fedtrain] faults: {len(f['quarantined'])} quarantined"
+    if f["quarantined"]:
+        reasons = ", ".join(f"p{c}:{r}"
+                            for c, r in sorted(f["quarantined"].items()))
+        line += f" ({reasons})"
+    line += (f", {sum(f['retried'].values())} retries "
+             f"(+{f['retry_s']:.3f}s backoff, "
+             f"{f['retry_bytes'] / 1024:.1f} KiB / "
+             f"{f['retry_j']:.4f}J resent)")
+    if f["replays_rejected"]:
+        line += f", replays rejected {f['replays_rejected']}"
+    print(line)
+    if f["failed_over"] or f["recovered"]:
+        print(f"[fedtrain] recovery: failed over "
+              f"{f['failed_over'] or '[]'}, {f['recovered']} journal "
+              "edge(s) recovered")
+    if quorum["target"] < 1.0:
+        print(f"[fedtrain] quorum: committed "
+              f"{quorum['committed_frac']:.2f} of samples "
+              f"({quorum['n_committed']} clients) at target "
+              f"{quorum['target']:.2f}; {quorum['n_deferred']} "
+              "deferred to the post-commit merge")
 
 
 def _print_hierarchy(report):

@@ -386,6 +386,16 @@ class SecAggSession:
             off += size
         return MaskedStats(limbs=tuple(out), ids=frozenset(ids))
 
+    def to_flat(self, masked: MaskedStats) -> np.ndarray:
+        """Inverse of :meth:`from_flat`: a masked aggregate's
+        ``(n_elems, words)`` flat limb image. This is what the round
+        journal (core/faults.py) commits for masked tiers — the
+        snapshot is still masked, so the write-ahead log on disk
+        leaks nothing an upload didn't."""
+        return np.concatenate(
+            [np.asarray(lf, np.int64).reshape(-1, self.words)
+             for lf in masked.limbs], axis=0)
+
     def recover_residual(self, ids: FrozenSet[int]
                          ) -> Optional[np.ndarray]:
         """Dropout recovery: the pad residue left in a sum over ``ids``.

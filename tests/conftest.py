@@ -9,10 +9,14 @@ subprocess mesh tests included.
 conformance matrix, limb-algebra properties, secagg/dp units) so
 ``pytest -m privacy`` runs just that surface; they stay tier-1 by
 default — privacy regressions are correctness regressions.
+
+``faults`` groups the fault-injection/recovery suite (DESIGN.md §12:
+quarantine, quorum commit, failover, journaled resume) the same way.
 """
 import pytest
 
 _PRIVACY_FILES = ("test_privacy", "test_privacy_matrix", "test_limbs")
+_FAULT_FILES = ("test_faults",)
 
 
 def pytest_collection_modifyitems(items):
@@ -20,5 +24,8 @@ def pytest_collection_modifyitems(items):
         if any(item.fspath.purebasename.startswith(p)
                for p in _PRIVACY_FILES):
             item.add_marker(pytest.mark.privacy)
+        if any(item.fspath.purebasename.startswith(p)
+               for p in _FAULT_FILES):
+            item.add_marker(pytest.mark.faults)
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.tier1)
