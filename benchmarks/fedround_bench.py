@@ -36,6 +36,14 @@ The ``faults`` section is the robustness companion (EXPERIMENTS.md
 retry surcharge — duplicate upload bytes/joules and backoff seconds
 (``RoundReport.faults``).
 
+The ``contribution`` section is the green-selection companion
+(EXPERIMENTS.md §Client selection): P=100 Dirichlet(0.3) shards
+scored by exact leave-one-out contribution, one committed round per
+``select=topk:K`` for K ∈ {10, 25, 50, 100} (held-out accuracy vs
+selected uplink joules) plus the full ``select=frontier``
+accuracy-per-joule prefix curve — ci_smoke asserts the section's
+joule columns are monotone.
+
 Writes ``BENCH_fedround.json`` at the repo root (overridable) so CI and
 future sessions can diff perf trajectories —
 ``scripts/ci_smoke.sh`` asserts the file exists and is well-formed.
@@ -181,6 +189,106 @@ def run_faults_section(dataset: str = "susy", seed: int = 0) -> dict:
             "rows": rows}
 
 
+SELECT_K_GRID = [10, 25, 50, 100]
+SELECT_P = 100
+
+
+def run_contribution_section(dataset: str = "susy", quick: bool = False,
+                             seed: int = 0) -> dict:
+    """The ``contribution`` BENCH section: accuracy per joule under
+    exact-LOO selection (EXPERIMENTS.md §Client selection).
+
+    P=100 Dirichlet(0.3) shards of ``dataset`` — the heterogeneous
+    regime where clients genuinely differ in marginal value — scored
+    against a validation split carved from train, then one committed
+    round per K ∈ {10, 25, 50, 100} (``select=topk:K``) recording the
+    selected cohort's held-out accuracy and uplink joules, plus one
+    ``select=frontier`` run recording the full accuracy-per-joule
+    prefix curve. Rows are K-sorted, so ``selected_j``/
+    ``selected_bytes`` are nondecreasing down the table and the
+    frontier's ``cum_j`` is nondecreasing in k — the two monotonicity
+    properties ci_smoke asserts.
+    """
+    from repro.core import predict_labels
+    from repro.core.scenario import Scenario
+    (Xtr, ytr), (Xte, yte) = common.load(dataset, None, seed)
+    # scoring split carved from TRAIN (the fedtrain idiom — selection
+    # is part of training, so it never sees held-out test data)
+    (Xfit, yfit), (Xva, yva) = synthetic.train_test_split(
+        Xtr, ytr, train_frac=0.8, seed=seed + 1)
+    P = min(SELECT_P, len(yfit) // 2)
+    parts = partition.dirichlet(Xfit, yfit, P, alpha=0.3, seed=seed)
+    pX = [p[0] for p in parts]
+    pD = [np.asarray(acts.encode_labels(p[1], 2)) for p in parts]
+
+    def _acc(W):
+        pred = predict_labels(W, Xte, act="logistic")
+        return float((np.asarray(pred) == np.asarray(yte)).mean())
+
+    rows = []
+    for K in SELECT_K_GRID:
+        if K > P:
+            print(f"[bench] skip contribution K={K}: only {P} clients")
+            continue
+        eng = FederationEngine(
+            wire="gram", warmup=True, batch_clients=True,
+            scenario=Scenario.parse(f"partition=dirichlet,"
+                                    f"select=topk:{K}"),
+            select_eval=(Xva, yva))
+        t0 = time.perf_counter()
+        r = eng.run(pX, pD)
+        wall = time.perf_counter() - t0
+        c = r.contribution
+        rows.append({
+            "K": K, "P": P,
+            "n_selected": c["n_selected"],
+            "accuracy": round(_acc(r.W), 6),
+            "acc_full": round(c["acc_full"], 6),
+            "selected_bytes": c["spent_bytes"],
+            "selected_j": c["spent_j"],
+            "score_s": round(c["score_s"], 6),
+            "wall_s": round(wall, 6),
+        })
+        print(f"[bench] contribution K={K}: acc {rows[-1]['accuracy']} "
+              f"({c['n_selected']} kept, {c['spent_j']:.4f} J uplink, "
+              f"scored in {c['score_s']:.3f}s)")
+    eng = FederationEngine(
+        wire="gram", warmup=True, batch_clients=True,
+        scenario=Scenario.parse("partition=dirichlet,select=frontier"),
+        select_eval=(Xva, yva))
+    r = eng.run(pX, pD)
+    frontier = r.contribution["frontier"]
+    if quick:
+        # thin the curve for the quick lane; endpoints stay
+        frontier = frontier[::4] + ([frontier[-1]]
+                                    if frontier[-1] not in frontier[::4]
+                                    else [])
+    print(f"[bench] contribution frontier: {len(frontier)} points, "
+          f"k={frontier[0]['k']}..{frontier[-1]['k']}, final acc "
+          f"{frontier[-1]['accuracy']:.4f} @ "
+          f"{frontier[-1]['cum_j']:.4f} J")
+    return {"wire": "gram", "dataset": dataset, "partition": "dirichlet",
+            "alpha": 0.3, "P": P, "rows": rows,
+            "frontier": list(frontier)}
+
+
+def run_contribution(quick: bool = False, json_path: str | None = None,
+                     dataset: str = "susy", seed: int = 0) -> dict:
+    """Standalone entry (``--only contribution``): merge the section
+    into an existing ``BENCH_fedround.json`` (the run_faults idiom)."""
+    section = run_contribution_section(dataset, quick, seed)
+    path = json_path or JSON_DEFAULT
+    payload = {"bench": "fedround", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["contribution"] = section
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] merged contribution section into {path}")
+    return section
+
+
 def run_faults(quick: bool = False, json_path: str | None = None,
                dataset: str = "susy", seed: int = 0) -> dict:
     """Standalone entry (``--only faults``): merge the section into an
@@ -246,6 +354,7 @@ def run(scale=None, dataset: str = "susy", quick: bool = False,
         "rows": rows,
         "hierarchy": run_hierarchy(dataset, quick, seed),
         "faults": run_faults_section(dataset, seed),
+        "contribution": run_contribution_section(dataset, quick, seed),
     }
     path = json_path or JSON_DEFAULT
     # a fedround run resets the file; benchmarks/ledger_bench.py merges

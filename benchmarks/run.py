@@ -28,7 +28,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "fig4", "table3", "scenario",
                              "fedround", "ledger", "privacy", "faults",
-                             "kernel", "roofline"],
+                             "contribution", "kernel", "roofline"],
                     help="run a single benchmark")
     args = ap.parse_args()
 
@@ -73,6 +73,10 @@ def main():
         # standalone entry re-measures and merges it into the JSON
         print("== Fault tolerance: availability vs retry joules ==")
         fedround_bench.run_faults(quick=args.quick)
+    if args.only == "contribution":
+        # same merge idiom: re-measure just the selection section
+        print("== Client selection: accuracy per joule (exact LOO) ==")
+        fedround_bench.run_contribution(quick=args.quick)
     if want("kernel"):
         print("== Kernel micro-bench ==")
         kernel_bench.run()

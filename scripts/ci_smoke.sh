@@ -73,6 +73,15 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
   --journal "$FAULT_WAL" --faults "aggfail@tier0:g1"
 rm -f "$FAULT_WAL"
 
+# contribution-scored selection end-to-end: one budget-greedy round
+# (exact LOO scores, joule-priced admission) through the launcher
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
+  --wire gram --transport local --select "budget:0.01"
+# and the secagg composition: scores from decoded aggregates only,
+# selection floor of 2 so no singleton aggregate is ever solved
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
+  --wire gram --transport local --privacy secagg --select "topk:3"
+
 # the event-driven ledger path end-to-end: timeline rounds with a
 # checkpoint save, then a restore-and-continue run (bit-exact state)
 LEDGER_CKPT="$(mktemp -u /tmp/ci_ledger_XXXX.npz)"
@@ -97,6 +106,9 @@ python -m benchmarks.run --json --only ledger
 # the privacy bench at full size (P=8 × 8192 samples/client — the
 # shape the ≤2× secagg ΣCPU bar is stated at; measured ~1.4–1.7×)
 python -m benchmarks.run --json --only privacy
+# the contribution bench at full P=100 Dirichlet: the K-sweep and the
+# accuracy-per-joule frontier the asserts below check for monotonicity
+python -m benchmarks.run --json --only contribution
 python - <<'PY'
 import json
 d = json.load(open("BENCH_fedround.json"))
@@ -185,11 +197,38 @@ lossy = by_flaky[0.2]
 assert lossy["retries"] > 0 and lossy["retry_j"] > 0, \
     f"flaky=0.2 round priced no retries: {lossy}"
 avail = {r["flaky"]: r["availability"] for r in flt["rows"]}
+# ISSUE 9 acceptance: the contribution section is well-formed — the
+# exact-LOO selection sweep K in {10, 25, 50, 100} with joule spend
+# monotone in K, and an accuracy-per-joule frontier whose cumulative
+# cost columns are monotone in the prefix size
+con = d["contribution"]
+assert con["rows"], "empty contribution bench section"
+need_c = {"K", "P", "n_selected", "accuracy", "acc_full",
+          "selected_bytes", "selected_j", "score_s", "wall_s"}
+for r in con["rows"]:
+    missing = need_c - set(r)
+    assert not missing, f"contribution row missing {missing}"
+    assert r["n_selected"] == min(r["K"], r["P"]), r
+    assert 0.0 < r["accuracy"] <= 1.0, r
+ks = [r["K"] for r in con["rows"]]
+assert ks == sorted(ks) and {10, 25, 50, 100} <= set(ks), ks
+for a, b in zip(con["rows"], con["rows"][1:]):
+    assert b["selected_j"] >= a["selected_j"], \
+        f"selected_j not monotone in K: {a} -> {b}"
+    assert b["selected_bytes"] >= a["selected_bytes"], \
+        f"selected_bytes not monotone in K: {a} -> {b}"
+fr = con["frontier"]
+assert fr, "empty contribution frontier"
+for a, b in zip(fr, fr[1:]):
+    assert b["cum_j"] >= a["cum_j"] and b["cum_bytes"] >= a["cum_bytes"], \
+        f"frontier cost not monotone: {a} -> {b}"
+    assert b["k"] > a["k"], f"frontier k not increasing: {a} -> {b}"
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"ledger delta fracs {led['delta_cpu_frac']}, "
       f"secagg CPU {frac:.2f}x, fused+secagg {fused_frac:.2f}x, "
       f"acc@eps {curve}, hierarchy peaks {peaks}, "
-      f"availability {avail})")
+      f"availability {avail}, selection acc@K "
+      f"{ {r['K']: r['accuracy'] for r in con['rows']} })")
 PY
 
 echo "ci_smoke: OK"

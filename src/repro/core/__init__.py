@@ -1,6 +1,9 @@
 """Paper core: single-round analytic federated learning for one-layer NNs."""
-from . import activations, engine, federated, head, ledger, scenario, \
-    sharded, solver, topology, wire
+from . import activations, contribution, engine, federated, head, \
+    ledger, scenario, sharded, solver, topology, wire
+from .contribution import (ClientScore, ContributionReport, SelectSpec,
+                           Selection, greedy_select, loo_scores,
+                           shapley_scores)
 from .engine import FederationEngine, RoundReport
 from .topology import TierTree, Topology, simulate_round
 from .federated import (FedONNClient, FedONNCoordinator,
@@ -16,8 +19,10 @@ from .solver import (ClientStats, GramStats, centralized_solve_gram,
 from .wire import GramWire, SvdWire, Wire, get_wire
 
 __all__ = [
-    "activations", "engine", "federated", "head", "ledger", "scenario",
-    "sharded", "solver", "topology", "wire",
+    "activations", "contribution", "engine", "federated", "head",
+    "ledger", "scenario", "sharded", "solver", "topology", "wire",
+    "ClientScore", "ContributionReport", "SelectSpec", "Selection",
+    "greedy_select", "loo_scores", "shapley_scores",
     "FederationEngine", "RoundReport", "ClientRoles", "Scenario",
     "Timeline", "TimelineEvent", "ExactAccumulator", "FederationLedger",
     "TierTree", "Topology", "simulate_round",

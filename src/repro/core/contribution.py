@@ -1,0 +1,389 @@
+"""Exact contribution scores + budgeted client selection (DESIGN.md §13).
+
+The paper's round is one analytic solve over additive statistics, which
+makes every client's marginal utility *exactly* computable: the ledger's
+dyadic-integer downdate (``FederationLedger.peek_without``, DESIGN.md
+§9) yields the leave-one-out aggregate — and hence the leave-one-out
+model ``W_{-i}`` — bit-identically to a from-scratch fold over the
+cohort minus that client, in one O(c·m²) downdate + one solve. No
+re-aggregation, no retraining, and (unlike iterative FL, where
+GreedyFed must Monte-Carlo-estimate Shapley values over expensive
+rounds) no estimation error.
+
+Three layers:
+
+* :func:`loo_scores` — per-client Δaccuracy (full-cohort model minus
+  the leave-one-out model, on a coordinator-held eval set) and the
+  Δjoules that client's participation costs (upload bytes priced by the
+  ``CostModel``'s J/byte radio term). One extra solve per client.
+* :func:`shapley_scores` — EXACT Shapley values by coalition
+  enumeration, tractable for cohorts ≤ :data:`SHAPLEY_MAX_CLIENTS`
+  (2^k solves; the documented bound keeps that under ~65k solves).
+  Refused under secure aggregation: singleton coalitions would decode
+  one client's aggregate, which is that client's plaintext.
+* :func:`greedy_select` / :data:`SelectSpec` — a greedy selector
+  maximizing accuracy under an upload-byte or joule budget (or a
+  top-K count), plus the parsed ``select=topk:K|budget:J|frontier``
+  axis the :class:`~.scenario.Scenario` grammar carries into
+  ``FederationEngine``.
+
+Scores are computed coordinator-side from (decoded) *aggregates* only:
+under secagg the downdate happens in the masked ring
+(``MaskedWire.subtract``) and the base wire's solve never receives a
+single client's plaintext statistics (spy-tested in
+tests/test_contribution.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from itertools import combinations
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..energy.meter import CostModel, J_PER_BYTE
+from .ledger import ExactAccumulator, FederationLedger
+from .solver import predict_labels
+
+# Exact Shapley enumerates all 2^k coalitions; k = 16 is the documented
+# tractability bound (65 536 coalition solves — seconds at ONN sizes,
+# and far past the point where LOO scores are the right tool anyway).
+SHAPLEY_MAX_CLIENTS = 16
+
+
+# --------------------------------------------------------------- spec
+@dataclasses.dataclass(frozen=True)
+class SelectSpec:
+    """Parsed ``select=`` axis: ``topk:K`` | ``budget:J`` | ``frontier``.
+
+    * ``topk:K``    — keep the K highest-LOO-utility clients,
+    * ``budget:J``  — greedy knapsack under a joule budget J (suffix
+      ``b``/``B`` reads the number as an upload-byte budget instead;
+      ``budget:inf`` admits everyone — and must bit-match the
+      unselected round, tested),
+    * ``frontier``  — select everyone but also solve every prefix of
+      the utility ordering, reporting the full accuracy-per-joule
+      frontier.
+    """
+    kind: str                       # "topk" | "budget" | "frontier"
+    k: Optional[int] = None
+    budget_j: Optional[float] = None
+    budget_bytes: Optional[int] = None
+
+    @classmethod
+    def parse(cls, spec) -> Optional["SelectSpec"]:
+        """``"topk:10"``/``"budget:0.05"``/``"budget:4096B"``/
+        ``"frontier"`` → SelectSpec; ``None``/``""``/``"none"`` → None.
+        Malformed specs raise ``ValueError`` quoting the offending
+        token (the PR 4 kv-grammar convention)."""
+        if spec is None or isinstance(spec, SelectSpec):
+            return spec
+        tok = str(spec).strip()
+        if not tok or tok.lower() == "none":
+            return None
+        kind, sep, val = tok.partition(":")
+        kind = kind.strip().lower()
+        if kind == "frontier":
+            if sep:
+                raise ValueError(
+                    f"bad select spec {tok!r}: 'frontier' takes no "
+                    "value")
+            return cls(kind="frontier")
+        if kind not in ("topk", "budget"):
+            raise ValueError(
+                f"bad select spec {tok!r} (expected 'topk:K', "
+                "'budget:J[B]' or 'frontier')")
+        if not sep or not val.strip():
+            raise ValueError(
+                f"bad select spec {tok!r}: {kind!r} needs a value "
+                f"('{kind}:...')")
+        val = val.strip()
+        if kind == "topk":
+            try:
+                k = int(val)
+            except ValueError:
+                raise ValueError(
+                    f"bad select spec {tok!r} (topk needs an integer "
+                    "K)") from None
+            if k < 1:
+                raise ValueError(
+                    f"bad select spec {tok!r}: K must be >= 1")
+            return cls(kind="topk", k=k)
+        as_bytes = val[-1:].lower() == "b"
+        num = val[:-1] if as_bytes else val
+        try:
+            x = float(num)
+        except ValueError:
+            raise ValueError(
+                f"bad select spec {tok!r} (budget needs a number, "
+                "optionally suffixed 'B' for bytes)") from None
+        if not x > 0:
+            raise ValueError(
+                f"bad select spec {tok!r}: the budget must be > 0")
+        if as_bytes:
+            if math.isinf(x):
+                return cls(kind="budget", budget_j=float("inf"))
+            return cls(kind="budget", budget_bytes=int(x))
+        return cls(kind="budget", budget_j=x)
+
+
+# -------------------------------------------------------------- scores
+@dataclasses.dataclass(frozen=True)
+class ClientScore:
+    """One client's exact marginal value and marginal cost."""
+    cid: int
+    d_acc: float          # acc(full cohort) − acc(cohort minus client)
+    acc_loo: float        # accuracy of the leave-one-out model W_{-i}
+    upload_bytes: int     # this client's wire upload
+    d_joules: float       # uplink energy its participation costs
+
+    @property
+    def utility_per_joule(self) -> float:
+        return self.d_acc / self.d_joules if self.d_joules else \
+            math.copysign(math.inf, self.d_acc) if self.d_acc else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ContributionReport:
+    """LOO scores for one cohort + the full-cohort reference model."""
+    acc_full: float
+    scores: Tuple[ClientScore, ...]
+    lam: float
+
+    def by_cid(self) -> Dict[int, ClientScore]:
+        return {s.cid: s for s in self.scores}
+
+    def ranked(self) -> List[ClientScore]:
+        """Utility order: highest Δaccuracy first, ties by lower cost
+        then lower cid — the deterministic greedy ordering."""
+        return sorted(self.scores,
+                      key=lambda s: (-s.d_acc, s.d_joules, s.cid))
+
+
+def _accuracy(wire, W, X_eval, y_eval) -> float:
+    pred = predict_labels(W, X_eval, act=wire.act)
+    return float((np.asarray(pred) == np.asarray(y_eval)).mean())
+
+
+def loo_scores(ledger: FederationLedger, X_eval, y_eval, *,
+               lam: Optional[float] = None,
+               cost: Optional[CostModel] = None) -> ContributionReport:
+    """Exact leave-one-out scores for every active ledger client.
+
+    ``Δacc_i = acc(W) − acc(W_{-i})`` where ``W_{-i}`` solves over
+    ``ledger.peek_without(i)`` — bit-identical to a from-scratch fold
+    over the cohort minus ``i`` (exact/ring paths), one downdate + one
+    solve per client, with the ledger state left bit-identical
+    (score-then-restore round-trip, property-tested). ``Δjoules_i`` is
+    the client's upload priced at the cost model's J/byte radio term.
+    """
+    lam = ledger.lam if lam is None else lam
+    cost = cost or CostModel()
+    wire = ledger.wire
+    acc_full = _accuracy(wire, wire.solve(ledger.global_stats(), lam),
+                         X_eval, y_eval)
+    scores = []
+    only_one = len(ledger.registry) == 1
+    for cid in ledger.clients:
+        nbytes = int(wire.wire_bytes(ledger.registry[cid]))
+        if only_one:
+            # a singleton cohort's LOO model is undefined (empty fold);
+            # by convention the lone client carries the whole accuracy
+            acc_loo = 0.0
+        else:
+            W_loo = wire.solve(ledger.peek_without(cid), lam)
+            acc_loo = _accuracy(wire, W_loo, X_eval, y_eval)
+        scores.append(ClientScore(
+            cid=int(cid), d_acc=acc_full - acc_loo, acc_loo=acc_loo,
+            upload_bytes=nbytes,
+            d_joules=float(cost.comm_joules(nbytes))))
+    return ContributionReport(acc_full=acc_full, scores=tuple(scores),
+                              lam=lam)
+
+
+def shapley_scores(ledger: FederationLedger, X_eval, y_eval, *,
+                   lam: Optional[float] = None,
+                   max_clients: int = SHAPLEY_MAX_CLIENTS
+                   ) -> Dict[int, float]:
+    """EXACT Shapley values of accuracy, by coalition enumeration.
+
+    ``φ_i = Σ_{S ⊆ N∖{i}} |S|!(n−|S|−1)!/n! · (v(S∪{i}) − v(S))`` with
+    ``v(S)`` the eval accuracy of the model solved over coalition
+    ``S``'s statistics (``v(∅)`` = accuracy of the all-zero model — the
+    constant-class predictor). Exact because the one-shot fold makes
+    every coalition's model one merge + solve away; tractable only for
+    cohorts ≤ ``max_clients`` (2^k coalition solves — the documented
+    bound, DESIGN.md §13). Larger cohorts should use :func:`loo_scores`.
+
+    Refused on masked wires: enumerating coalitions means decoding
+    singleton aggregates, i.e. per-client plaintext — exactly what
+    secure aggregation exists to prevent.
+    """
+    lam = ledger.lam if lam is None else lam
+    wire = ledger.wire
+    if getattr(wire, "base", None) is not None:
+        raise NotImplementedError(
+            "exact Shapley under secure aggregation is refused: "
+            "coalition enumeration decodes singleton aggregates, "
+            "which is a client's plaintext statistics; use LOO "
+            "scores (aggregates of >= cohort-1 clients) instead")
+    ids = list(ledger.clients)
+    n = len(ids)
+    if n == 0:
+        raise ValueError("empty federation: no client ever joined")
+    if n > max_clients:
+        raise ValueError(
+            f"exact Shapley enumerates 2^{n} coalitions; cohort size "
+            f"{n} exceeds the tractability bound max_clients="
+            f"{max_clients} — use loo_scores for large cohorts")
+    # v(∅): the zero-weight model predicts one constant class
+    W0 = np.zeros_like(np.asarray(wire.solve(
+        ledger.global_stats(), lam)))
+    v_empty = _accuracy(wire, W0, X_eval, y_eval)
+    # coalition values via one ExactAccumulator per evaluation — the
+    # same fold algebra as the ledger, so v({i}) == a fresh ledger of i
+    values: Dict[frozenset, float] = {frozenset(): v_empty}
+    for r in range(1, n + 1):
+        for coal in combinations(ids, r):
+            acc = ExactAccumulator(ledger.registry[coal[0]])
+            for c in coal:
+                acc.add(ledger.registry[c])
+            W = wire.solve(acc.snapshot(), lam)
+            values[frozenset(coal)] = _accuracy(wire, W, X_eval, y_eval)
+    fact = [math.factorial(i) for i in range(n + 1)]
+    phi = {}
+    for i in ids:
+        others = [c for c in ids if c != i]
+        total = 0.0
+        for r in range(0, n):
+            w = fact[r] * fact[n - r - 1] / fact[n]
+            for coal in combinations(others, r):
+                s = frozenset(coal)
+                total += w * (values[s | {i}] - values[s])
+        phi[int(i)] = total
+    return phi
+
+
+# ----------------------------------------------------------- selection
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Outcome of a selection pass over a scored cohort."""
+    selected: Tuple[int, ...]       # kept client ids, sorted
+    order: Tuple[int, ...]          # full utility ranking (all scored)
+    spent_bytes: int                # Σ upload bytes of the selected
+    spent_j: float                  # Σ uplink joules of the selected
+    spec: SelectSpec
+    frontier: Optional[Tuple[dict, ...]] = None
+
+
+def greedy_select(report: ContributionReport, spec: SelectSpec,
+                  *, min_selected: int = 1) -> Selection:
+    """Greedy accuracy-maximizing selection under ``spec``.
+
+    Clients are ranked by exact LOO Δaccuracy (ties by lower cost,
+    then cid). ``topk:K`` keeps the first ``min(K, P)``; ``budget:J``
+    walks the ranking admitting every client whose cost still fits
+    (knapsack-greedy — unaffordable clients are skipped, cheaper
+    useful ones behind them still admitted); ``frontier`` (and
+    ``budget:inf``) keep everyone. At least ``min_selected`` clients
+    are always kept (a round needs an upload to solve; under secagg
+    the engine raises this to 2 so no single-client aggregate is ever
+    decoded) — if even the cheapest top-ranked clients exceed the
+    budget they are admitted anyway, and the overrun is visible in
+    ``spent_j``/``spent_bytes``.
+    """
+    ranked = report.ranked()
+    order = tuple(s.cid for s in ranked)
+    by_cid = report.by_cid()
+    if spec.kind == "topk":
+        keep = list(order[:min(spec.k, len(order))])
+    elif spec.kind == "frontier" or (spec.budget_j is not None
+                                     and math.isinf(spec.budget_j)):
+        keep = list(order)
+    else:
+        use_bytes = spec.budget_bytes is not None
+        budget = spec.budget_bytes if use_bytes else spec.budget_j
+        keep, spent = [], 0.0
+        for s in ranked:
+            c = s.upload_bytes if use_bytes else s.d_joules
+            if spent + c <= budget:
+                keep.append(s.cid)
+                spent += c
+        for s in ranked:            # floor: a round needs uploads
+            if len(keep) >= min_selected:
+                break
+            if s.cid not in keep:
+                keep.append(s.cid)
+    while len(keep) < min_selected and len(keep) < len(order):
+        keep.append(next(c for c in order if c not in keep))
+    kept = set(keep)
+    return Selection(
+        selected=tuple(sorted(kept)), order=order,
+        spent_bytes=int(sum(by_cid[c].upload_bytes for c in kept)),
+        spent_j=float(sum(by_cid[c].d_joules for c in kept)),
+        spec=spec)
+
+
+def accuracy_frontier(ledger: FederationLedger, report:
+                      ContributionReport, X_eval, y_eval, *,
+                      lam: Optional[float] = None,
+                      min_prefix: int = 1) -> Tuple[dict, ...]:
+    """The accuracy-per-joule frontier: one point per prefix of the
+    utility ranking — ``{k, cids, cum_bytes, cum_j, accuracy}``.
+
+    Prefix aggregates fold incrementally (one merge + one solve per
+    point, O(P) total solves). ``min_prefix`` starts the curve at a
+    larger prefix — the engine passes 2 under secagg so the k=1 point
+    (a decoded single-client aggregate, i.e. plaintext) is never
+    solved. Cumulative bytes/joules are monotone in k by construction
+    (each point adds one client's non-negative cost) — the property
+    ci_smoke asserts.
+    """
+    lam = ledger.lam if lam is None else lam
+    wire = ledger.wire
+    by_cid = report.by_cid()
+    order = [s.cid for s in report.ranked()]
+    points = []
+    agg = None
+    cum_bytes, cum_j = 0, 0.0
+    for k, cid in enumerate(order, start=1):
+        st = ledger.registry[cid]
+        agg = st if agg is None else wire.merge(agg, st)
+        cum_bytes += by_cid[cid].upload_bytes
+        cum_j += by_cid[cid].d_joules
+        if k < min_prefix:
+            continue
+        acc = _accuracy(wire, wire.solve(agg, lam), X_eval, y_eval)
+        points.append({"k": k, "cum_bytes": int(cum_bytes),
+                       "cum_j": float(cum_j),
+                       "accuracy": float(acc)})
+    return tuple(points)
+
+
+def contribution_summary(report: ContributionReport,
+                         selection: Selection,
+                         score_s: float = 0.0) -> dict:
+    """The stable ``RoundReport.contribution`` / BENCH dict."""
+    spec = selection.spec
+    return {
+        "mode": spec.kind,
+        "k": spec.k,
+        "budget_j": None if spec.budget_j is None
+        else (None if math.isinf(spec.budget_j) else spec.budget_j),
+        "budget_bytes": spec.budget_bytes,
+        "acc_full": report.acc_full,
+        "scores": [{"cid": s.cid, "d_acc": s.d_acc,
+                    "acc_loo": s.acc_loo,
+                    "upload_bytes": s.upload_bytes,
+                    "d_joules": s.d_joules}
+                   for s in report.scores],
+        "order": list(selection.order),
+        "selected": list(selection.selected),
+        "n_selected": len(selection.selected),
+        "spent_bytes": selection.spent_bytes,
+        "spent_j": selection.spent_j,
+        "frontier": None if selection.frontier is None
+        else list(selection.frontier),
+        "score_s": float(score_s),
+    }

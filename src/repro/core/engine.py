@@ -79,6 +79,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import activations as acts
+from .contribution import (SelectSpec, accuracy_frontier,
+                           contribution_summary, greedy_select,
+                           loo_scores)
 from .faults import (CoordinatorKilled, FaultPlan, RoundFaults,
                      RoundJournal, UploadRejected, empty_faults_report,
                      inject_corrupt, validate_upload)
@@ -151,6 +154,12 @@ class RoundReport:
     # values on fault-free runs so downstream JSON consumers get a
     # stable schema
     faults: dict = dataclasses.field(default_factory=empty_faults_report)
+    # contribution-scored selection rounds (core/contribution.py,
+    # DESIGN.md §13): exact per-client LOO scores, the utility
+    # ranking, the selected cohort with its byte/joule spend, and —
+    # in frontier mode — the accuracy-per-joule prefix curve; None
+    # when the scenario has no select axis
+    contribution: Optional[dict] = None
 
     @property
     def client_clocks(self) -> List[float]:
@@ -202,7 +211,8 @@ class FederationEngine:
                  dtype: Any = jnp.float32, batch_clients: bool = False,
                  fused: bool = False, privacy: Any = None,
                  topology: Any = None, faults: Any = None,
-                 quorum: float = 1.0, journal: Optional[str] = None):
+                 quorum: float = 1.0, journal: Optional[str] = None,
+                 select_eval: Optional[tuple] = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
@@ -259,6 +269,18 @@ class FederationEngine:
                 "upload boundaries, but the flat mesh collective is "
                 "all-or-nothing; add topology=... so the mesh folds "
                 "per-edge, or use an in-process transport")
+        # budgeted client selection (core/contribution.py): the
+        # scenario's select axis, scored coordinator-side against the
+        # caller-held eval split passed as select_eval=(X_eval, y_eval)
+        self.select = SelectSpec.parse(self.scenario.select)
+        self.select_eval = select_eval
+        if self.select is not None and self.transport == "mesh" and \
+                self.topology is None:
+            raise ValueError(
+                "client selection needs per-client upload boundaries, "
+                "but the flat mesh collective is all-or-nothing; add "
+                "topology=... so clients fold per-edge, or use an "
+                "in-process transport")
         self._fused_cache = {}
         # imported here, not at module top: privacy/* imports the core
         # package, so a module-level import would cycle through a
@@ -422,6 +444,133 @@ class FederationEngine:
                            dropped=tuple(sorted(dropped)),
                            delays=tuple(delays))
 
+    # --------------------------------------------------------- selection
+    def _apply_selection(self, roles: ClientRoles, parts_X, parts_d):
+        """Contribution-scored client selection (DESIGN.md §13).
+
+        Runs right after fault admission: every admitted participant
+        computes and uploads its statistics ONCE (the scoring pass IS
+        the round's client phase — ``_phase_stats``, so the batched
+        bucket gears and the privacy encode apply as usual), the
+        coordinator folds them into a :class:`FederationLedger` and
+        scores each client by the exact leave-one-out downdate, then
+        the greedy selector keeps the cohort the ``select`` spec
+        admits. Unselected clients move to ``dropped`` — every
+        downstream fold then commits a model over exactly the selected
+        clients (which is what makes the committed ``W`` bit-match a
+        from-scratch solve over that cohort).
+
+        Under secagg the ledger runs on the masked wire: the LOO
+        downdate is a ring subtract and the base wire only ever solves
+        decoded aggregates of ≥ 2 clients (``min_selected``/
+        ``min_prefix`` = 2 — a decoded singleton aggregate would be
+        that client's plaintext; spy-tested). ``frontier`` additionally
+        solves every ≥-min prefix of the utility ranking.
+
+        Returns ``(filtered_roles, phase)`` where ``phase`` is ``None``
+        when no select axis is active, else a dict carrying the scoring
+        pass's stats/times/dispatches for reuse by
+        :meth:`_commit_selected` plus the ``RoundReport.contribution``
+        payload.
+        """
+        if self.select is None:
+            return roles, None
+        if self.select_eval is None:
+            raise ValueError(
+                f"scenario select={self.scenario.select!r} needs "
+                "coordinator-side eval data to score against: pass "
+                "select_eval=(X_eval, y_eval) to FederationEngine "
+                "(fedtrain carves it from the train split)")
+        X_eval, y_eval = self.select_eval
+        priv = self._priv
+        if priv is not None:
+            # scoring uploads come from EVERY admitted participant —
+            # the cohort the noise shares must scale to
+            priv.cohort = len(roles.participants)
+        stats, time_by, dispatches = self._phase_stats(
+            parts_X, parts_d, roles.participants)
+        t0 = time.perf_counter()
+        masked = priv is not None and priv.masked
+        ledger = FederationLedger(self._cw(), lam=self.lam,
+                                  act=self.wire.act)
+        for i in roles.participants:
+            ledger.join(i, stats[i])
+        report = loo_scores(ledger, X_eval, y_eval, lam=self.lam)
+        min_sel = 2 if masked else 1
+        if masked and len(roles.participants) < 2:
+            raise ValueError(
+                "selection under secagg needs >= 2 participants: a "
+                "decoded single-client aggregate would be that "
+                "client's plaintext")
+        sel = greedy_select(report, self.select, min_selected=min_sel)
+        if self.select.kind == "frontier":
+            sel = dataclasses.replace(sel, frontier=accuracy_frontier(
+                ledger, report, X_eval, y_eval, lam=self.lam,
+                min_prefix=min_sel))
+        keep = set(sel.selected)
+        # a round needs an on-time upload for its first solve: if the
+        # budget admitted only late joiners, promote the best-ranked
+        # on-time client into the cohort
+        if roles.on_time and not keep & set(roles.on_time):
+            best = next(c for c in sel.order if c in set(roles.on_time))
+            keep.add(best)
+            sel = dataclasses.replace(
+                sel, selected=tuple(sorted(keep)),
+                spent_bytes=sel.spent_bytes
+                + report.by_cid()[best].upload_bytes,
+                spent_j=sel.spent_j + report.by_cid()[best].d_joules)
+        score_s = time.perf_counter() - t0
+        roles_sel = ClientRoles(
+            on_time=tuple(i for i in roles.on_time if i in keep),
+            late=tuple(i for i in roles.late if i in keep),
+            dropped=tuple(sorted(set(roles.dropped)
+                                 | (set(roles.participants) - keep))),
+            delays=roles.delays)
+        phase = {
+            "stats": stats, "time_by": time_by,
+            "dispatches": dispatches,
+            "uploaders": tuple(roles.participants),
+            "score_s": score_s,
+            "contribution": contribution_summary(report, sel,
+                                                 score_s=score_s),
+        }
+        return roles_sel, phase
+
+    def _commit_selected(self, parts_X, parts_d, roles,
+                         phase) -> RoundReport:
+        """Commit the selected cohort, reusing the scoring uploads.
+
+        The scoring pass already materialized every participant's
+        (possibly masked) statistics, so the committed round folds the
+        SAME uploads over the selected roles — no second client phase.
+        ``wire_bytes`` counts every scoring upload (all admitted
+        participants transmitted — selection saves future rounds'
+        bytes, and the frontier prices exactly that trade); the
+        unselected clients' measured compute is reported in
+        ``contribution["scoring_client_s"]`` since ``client_times``
+        must align with the committed participants. The fused gear
+        degrades to this stats-materializing path when selection is
+        active: per-client statistics must exist to be scored.
+        """
+        stats, time_by = phase["stats"], phase["time_by"]
+        wire_bytes = sum(self._cw().wire_bytes(stats[i])
+                         for i in phase["uploaders"])
+        W, W_first, coordinator_time = self._coordinator(stats, roles)
+        contribution = dict(phase["contribution"])
+        contribution["scoring_client_s"] = float(
+            sum(time_by[i] for i in phase["uploaders"]
+                if i not in set(roles.participants)))
+        return RoundReport(
+            W=W, client_times=[time_by[i] for i in roles.participants],
+            coordinator_time=coordinator_time + phase["score_s"],
+            wire_bytes=wire_bytes, roles=roles,
+            n_samples=sum(int(parts_X[i].shape[0])
+                          for i in roles.participants),
+            W_first=W_first, dispatches=phase["dispatches"],
+            contribution=contribution,
+            # every scoring upload materialized before the fold
+            peak_coordinator_bytes=wire_bytes)
+
     # ------------------------------------------------------------ entry
     def run(self, parts_X: Sequence, parts_d: Sequence) -> RoundReport:
         """One round over pre-partitioned client data."""
@@ -520,6 +669,12 @@ class FederationEngine:
                 "fault injection / quorum / journal apply to one-shot "
                 "rounds (run): the event-driven ledger path models "
                 "churn as explicit timeline events instead")
+        if self.select is not None:
+            raise ValueError(
+                "scenario select=... applies to one-shot rounds (run): "
+                "the event-driven ledger path models membership as "
+                "explicit timeline events — score its registry "
+                "directly with core.contribution.loo_scores instead")
         timeline = Timeline.parse(timeline) if isinstance(timeline, str) \
             else timeline
         P = len(parts_X)
@@ -643,10 +798,18 @@ class FederationEngine:
                             dropped=tuple(sorted(set(range(P)) -
                                                  set(active))),
                             delays=tuple(delays))
+        # the tick's faults report carries the ledger's standing
+        # membership fallout — departures and evictions stay distinct
+        # buckets (an evicted client was quarantined post-fold, never a
+        # graceful leave; the schema test pins this apart)
+        faults = empty_faults_report()
+        faults["departed"] = sorted(int(c) for c in ledger.departed)
+        faults["evicted"] = {int(c): ledger.evicted[c]
+                             for c in sorted(ledger.evicted)}
         return RoundReport(
             W=W, client_times=[time_by.get(i, 0.0) for i in active],
             coordinator_time=coordinator_time, wire_bytes=wire_bytes,
-            roles=roles,
+            roles=roles, faults=faults,
             n_samples=sum(int(data[i][0].shape[0]) for i in active),
             dispatches=dispatches, tick=t, changed=tuple(changed),
             # on event-driven ticks the REGISTRY is the residency: exact
@@ -708,6 +871,11 @@ class FederationEngine:
     def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
         roles = self.scenario.roles(len(parts_X))
         roles = self._apply_faults(roles, parts_X, parts_d)
+        roles, sel = self._apply_selection(roles, parts_X, parts_d)
+        if sel is not None:
+            # the scoring pass was the client phase; commit the
+            # selected cohort over its (already encoded) uploads
+            return self._commit_selected(parts_X, parts_d, roles, sel)
         if self._priv is not None:
             # the round's cohort is known up front (a real coordinator
             # announces it): distributed noise shares scale to the
@@ -1304,6 +1472,12 @@ class FederationEngine:
         P = len(parts_X)
         roles = self.scenario.roles(P)
         roles = self._apply_faults(roles, parts_X, parts_d)
+        # selection scores in one flat coordinator-side pass, then the
+        # tier fold below runs over the selected cohort only (its
+        # client phase recomputes — the tiered fold is the committed
+        # round; the scoring pass's dispatches/bytes are accounted in
+        # report.contribution and dispatches)
+        roles, sel = self._apply_selection(roles, parts_X, parts_d)
         priv = self._priv
         if priv is not None:
             priv.cohort = len(roles.participants)
@@ -1601,6 +1775,13 @@ class FederationEngine:
                      "agg_bytes": int(agg_bytes),
                      "peak_bound_bytes": int(topo.fanout * agg_bytes),
                      **sim}
+        if sel is not None:
+            # the flat scoring pass's compute/dispatches ride the same
+            # report: selection happened before the tiered commit
+            dispatches += sel["dispatches"]
+            coord_s += sel["score_s"]
+            for i, dt in sel["time_by"].items():
+                time_by[i] = time_by.get(i, 0.0) + dt
         return RoundReport(
             W=W, client_times=[time_by[i] for i in roles.participants],
             coordinator_time=merge_s + coord_s,
@@ -1608,7 +1789,8 @@ class FederationEngine:
             n_samples=sum(int(parts_X[i].shape[0])
                           for i in roles.participants),
             W_first=W_first, dispatches=dispatches,
-            peak_coordinator_bytes=meter.peak, hierarchy=hierarchy)
+            peak_coordinator_bytes=meter.peak, hierarchy=hierarchy,
+            contribution=None if sel is None else sel["contribution"])
 
     # -------------------------------------------------------- mesh path
     def _mesh_masked(self, mesh, wire, X, D, Pn):

@@ -395,6 +395,13 @@ def empty_faults_report() -> Dict[str, Any]:
         "quorum": {"target": 1.0, "committed_frac": 1.0,
                    "n_committed": 0, "n_deferred": 0,
                    "committed": [], "deferred": []},
+        # ledger membership fallout (event-driven ticks): a graceful
+        # departure and a post-hoc eviction are DIFFERENT standing
+        # decisions — a departed client asked to leave, an evicted one
+        # was quarantined after its upload was folded. The two never
+        # share a client id (FederationLedger keeps them disjoint).
+        "departed": [],
+        "evicted": {},
     }
 
 

@@ -139,8 +139,10 @@ class FederationLedger:
         # continued run must not auto-readmit them (their departure was
         # an explicit event, possibly a deletion request)
         self.evicted: Dict[int, str] = {}  # post-hoc quarantines by
-        # reason (core/faults.py) — in-memory bookkeeping only, not
-        # checkpointed (restore of an older ledger stays valid)
+        # reason (core/faults.py) — tracked DISTINCTLY from graceful
+        # departures so fault accounting never conflates the two;
+        # checkpointed (restore of an older, evicted-less file stays
+        # valid via the back-compat guard in :meth:`restore`)
         self.tick = -1                 # last applied tick (-1 = fresh)
         self.n_events = 0
         self.subtractable = hasattr(self.wire, "subtract")
@@ -161,8 +163,11 @@ class FederationLedger:
     @property
     def seen(self) -> Tuple[int, ...]:
         """Every client id the ledger has a standing decision for —
-        active or departed. Auto-admission must not override either."""
-        return tuple(sorted(set(self.registry) | self.departed))
+        active, departed, or evicted. Auto-admission must not override
+        any of the three (an evicted client was quarantined; only an
+        explicit rejoin clears that flag)."""
+        return tuple(sorted(set(self.registry) | self.departed
+                            | set(self.evicted)))
 
     def _validate(self, stats) -> None:
         """Reject non-finite statistics BEFORE any state mutates — a
@@ -186,6 +191,10 @@ class FederationLedger:
         self._apply(stats, +1)
         self.registry[cid] = stats
         self.departed.discard(cid)
+        # a rejoin clears BOTH standing decisions: a client that was
+        # quarantined and later readmitted must not stay permanently
+        # flagged as evicted in fault reports (regression-tested)
+        self.evicted.pop(int(cid), None)
 
     def leave(self, cid: int) -> None:
         if cid not in self.registry:
@@ -198,9 +207,16 @@ class FederationLedger:
         out to be bad AFTER it folded. On the exact path the signed
         downdate makes the next snapshot — and so ``W`` — bit-identical
         to a ledger that never folded the client (the unlearning
-        guarantee, property-tested in tests/test_faults.py); the
-        reason is kept in :attr:`evicted` for the fault report."""
-        self.leave(cid)
+        guarantee, property-tested in tests/test_faults.py).
+
+        Eviction is NOT a graceful departure: the client lands in
+        :attr:`evicted` (with its reason), never in :attr:`departed`,
+        so downstream timeline/fault accounting can tell a deletion
+        request from a quarantine (asserted in the faults report
+        schema test)."""
+        if cid not in self.registry:
+            raise ValueError(f"evict of client {cid}: not active")
+        self._apply(self.registry.pop(cid), -1)
         self.evicted[int(cid)] = str(reason)
 
     def revise(self, cid: int, stats) -> None:
@@ -227,13 +243,62 @@ class FederationLedger:
     def global_stats(self):
         """The persisted global statistics over the live registry."""
         if not self.registry:
-            raise ValueError("empty federation: no active clients")
+            # distinguish WHY the federation is empty: a selection/
+            # fault round that evicted or deferred everyone debugs very
+            # differently from a federation no client ever joined
+            if self.evicted:
+                raise ValueError(
+                    "empty federation: all remaining clients were "
+                    f"evicted/quorum-deferred (evicted ids "
+                    f"{sorted(self.evicted)}"
+                    + (f", departed ids {sorted(self.departed)}"
+                       if self.departed else "") + ")")
+            if self.departed:
+                raise ValueError(
+                    "empty federation: every client departed "
+                    f"(departed ids {sorted(self.departed)})")
+            raise ValueError(
+                "empty federation: no client ever joined")
         if self.exact:
             return self._acc.snapshot()
         if self._agg is None:          # non-subtractable wire: re-merge
             self._agg = self.wire.merge_tree(
                 [self.registry[c] for c in self.clients])
         return self._agg
+
+    def peek_without(self, cid: int):
+        """Global statistics over the live registry MINUS ``cid``,
+        leaving every byte of ledger state bit-identical.
+
+        This is the leave-one-out primitive behind
+        ``core/contribution.py``: on the exact path the accumulator's
+        integers are subtracted and re-added (integer arithmetic never
+        rounds, so the round-trip is an exact no-op and the snapshot in
+        between equals a from-scratch fold over the survivors); on
+        subtractable float/ring wires it is a pure ``Wire.subtract`` of
+        the cached aggregate (no mutation at all — the masked wire's
+        ring downdate keeps LOO scoring plaintext-free); non-
+        subtractable wires re-merge the survivors in sorted-client
+        order, exactly what a fresh ledger of the survivors would fold.
+        ``n_events`` and the registry are untouched in every case.
+        """
+        if cid not in self.registry:
+            raise ValueError(f"peek_without client {cid}: not active")
+        if len(self.registry) == 1:
+            raise ValueError(
+                f"peek_without client {cid}: it is the only active "
+                "client — the leave-one-out cohort would be empty")
+        st = self.registry[cid]
+        if self.exact:
+            self._acc.subtract(st)
+            try:
+                return self._acc.snapshot()
+            finally:
+                self._acc.add(st)
+        if self.subtractable:
+            return self.wire.subtract(self.global_stats(), st)
+        return self.wire.merge_tree(
+            [self.registry[c] for c in self.clients if c != cid])
 
     def solve(self, lam: Optional[float] = None) -> jnp.ndarray:
         W = self.wire.solve(self.global_stats(),
@@ -274,7 +339,12 @@ class FederationLedger:
                 "tick": np.int64(self.tick),
                 "events": np.int64(self.n_events),
                 "ids": np.asarray(self.clients, np.int64),
-                "departed": np.asarray(sorted(self.departed), np.int64)}
+                "departed": np.asarray(sorted(self.departed), np.int64),
+                "evicted_ids": np.asarray(sorted(self.evicted),
+                                          np.int64),
+                "evicted_reasons": np.asarray(
+                    [self.evicted[c] for c in sorted(self.evicted)],
+                    dtype=np.str_)}
         clients = {str(cid): {f: np.asarray(v) for f, v in
                               zip(type(st)._fields, st)}
                    for cid, st in self.registry.items()}
@@ -310,4 +380,8 @@ class FederationLedger:
         led.n_events = int(flat["meta/events"])
         led.departed = set(flat["meta/departed"].tolist()) \
             if "meta/departed" in flat else set()
+        if "meta/evicted_ids" in flat:    # absent in pre-eviction files
+            led.evicted = dict(zip(
+                (int(c) for c in flat["meta/evicted_ids"].tolist()),
+                (str(r) for r in flat["meta/evicted_reasons"].tolist())))
         return led

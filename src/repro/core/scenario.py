@@ -17,7 +17,12 @@ arXiv:2303.14604):
   clients report ``straggler_delay`` seconds late. Delays are *simulated*
   (added to the reported client clock, never slept): they move the
   slowest-client ``train_time`` metric without burning real energy, and
-  must never change the model (tested).
+  must never change the model (tested),
+* ``select``         — budgeted client selection by exact leave-one-out
+  contribution scores (``topk:K`` | ``budget:J`` | ``frontier``;
+  ``core/contribution.py``, DESIGN.md §13) — the engine scores every
+  upload coordinator-side, keeps the utility-ranked cohort that fits
+  the budget, and commits a model over exactly the selected clients.
 
 All role assignment is deterministic in ``seed``, so an engine run and an
 external reference solve can agree on the exact participant set.
@@ -101,6 +106,12 @@ class Scenario:
     straggler_frac: float = 0.0
     straggler_delay: float = 0.0
     seed: int = 0
+    # budgeted client selection (core/contribution.py, DESIGN.md §13):
+    # "" = everyone participates; "topk:K" keeps the K highest exact
+    # leave-one-out-utility clients, "budget:J" greedily fills a joule
+    # (or, with a B suffix, upload-byte) budget, "frontier" keeps all
+    # but reports the full accuracy-per-joule frontier
+    select: str = ""
 
     def roles(self, P: int) -> ClientRoles:
         """Deterministic role draw for ``P`` clients.
@@ -163,6 +174,12 @@ class Scenario:
                 raise ValueError(
                     f"bad scenario item 'partition={kw['partition']}' "
                     f"(known partitioners: {sorted(PARTITIONERS)})")
+        if "select" in kw:
+            # validate eagerly so a malformed spec fails at parse time
+            # with the offending token, like every other scenario key
+            # (lazy import: contribution pulls in the ledger/solver)
+            from .contribution import SelectSpec
+            SelectSpec.parse(kw["select"])
         return cls(**kw)
 
 

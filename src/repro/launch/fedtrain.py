@@ -126,6 +126,16 @@ def main():
                          "digit snapshots; a coordinator killed "
                          "mid-fold resumes from this file "
                          "bit-identically (requires --topology)")
+    ap.add_argument("--select", default="none",
+                    help='budgeted client selection (core/contribution'
+                         '.py, DESIGN.md §13): "topk:K" keeps the K '
+                         'highest exact-LOO-utility clients, '
+                         '"budget:J" greedily admits clients under a '
+                         'joule budget (suffix B = upload-byte '
+                         'budget), "frontier" selects everyone and '
+                         'reports the accuracy-per-joule frontier; '
+                         'scores are computed coordinator-side against '
+                         'a validation split carved from train')
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -149,15 +159,32 @@ def main():
             "log commits per-tier aggregates of the hierarchical fold")
 
     scenario = Scenario.parse(args.scenario)
-    # --partition/--seed are the defaults; an explicit scenario key wins
+    # --partition/--seed/--select are the defaults; an explicit
+    # scenario key wins
     if "partition" not in args.scenario:
         scenario = dataclasses.replace(scenario, partition=args.partition)
     if "seed" not in args.scenario:
         scenario = dataclasses.replace(scenario, seed=args.seed)
+    if "select" not in args.scenario and \
+            args.select not in (None, "none", ""):
+        scenario = dataclasses.replace(scenario, select=args.select)
+    if scenario.select and args.timeline is not None:
+        raise SystemExit(
+            "[fedtrain] --select is incompatible with --timeline: "
+            "selection scores one-shot rounds; an event-driven "
+            "ledger's registry can be scored directly with "
+            "core.contribution.loo_scores")
 
     X, y = synthetic.generate(args.dataset, scale=args.scale,
                               seed=args.seed)
     (Xtr, ytr), (Xte, yte) = synthetic.train_test_split(X, y)
+    select_eval = None
+    if scenario.select:
+        # carve the scoring split from TRAIN (never test: selection is
+        # part of training, and scoring against test would leak it)
+        (Xtr, ytr), (Xva, yva) = synthetic.train_test_split(
+            Xtr, ytr, train_frac=0.8, seed=args.seed + 1)
+        select_eval = (Xva, yva)
     P = min(args.clients, len(ytr) // 2)
     policy = PrivacyPolicy(mode=args.privacy, epsilon=args.epsilon,
                            delta=args.delta, clip=args.clip,
@@ -170,7 +197,8 @@ def main():
                               fused=args.fused, privacy=policy,
                               topology=args.topology,
                               faults=args.faults, quorum=args.quorum,
-                              journal=args.journal)
+                              journal=args.journal,
+                              select_eval=select_eval)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
@@ -206,6 +234,36 @@ def main():
     _print_privacy(report)
     _print_hierarchy(report)
     _print_faults(report)
+    _print_contribution(report)
+
+
+def _print_contribution(report):
+    c = report.contribution
+    if not c:
+        return
+    budget = ""
+    if c["budget_j"] is not None:
+        budget = f" budget {c['budget_j']:g}J"
+    elif c["budget_bytes"] is not None:
+        budget = f" budget {c['budget_bytes']}B"
+    elif c["k"] is not None:
+        budget = f" K={c['k']}"
+    print(f"[fedtrain] selection ({c['mode']}{budget}): "
+          f"{c['n_selected']}/{len(c['scores'])} clients kept — "
+          f"spent {c['spent_bytes'] / 1024:.1f} KiB / "
+          f"{c['spent_j']:.4f}J uplink, scored in {c['score_s']:.3f}s")
+    top = sorted(c["scores"], key=lambda s: -s["d_acc"])[:3]
+    print("[fedtrain] top contributors (exact LOO): " + ", ".join(
+        f"p{s['cid']} Δacc {s['d_acc']:+.4f} @ {s['d_joules']:.5f}J"
+        for s in top))
+    if c["frontier"]:
+        pts = c["frontier"]
+        shown = pts if len(pts) <= 5 else \
+            [pts[0], pts[len(pts) // 4], pts[len(pts) // 2],
+             pts[3 * len(pts) // 4], pts[-1]]
+        print("[fedtrain] accuracy-per-joule frontier: " + " | ".join(
+            f"k={p['k']} acc {p['accuracy']:.4f} @ {p['cum_j']:.4f}J"
+            for p in shown))
 
 
 def _print_faults(report):

@@ -12,11 +12,17 @@ default — privacy regressions are correctness regressions.
 
 ``faults`` groups the fault-injection/recovery suite (DESIGN.md §12:
 quarantine, quorum commit, failover, journaled resume) the same way.
+
+``contribution`` groups the contribution-scoring/selection suite
+(DESIGN.md §13: exact LOO scores, exact Shapley, budget-greedy
+selection) the same way — tier-1 by default, since exactness
+regressions there are correctness regressions.
 """
 import pytest
 
 _PRIVACY_FILES = ("test_privacy", "test_privacy_matrix", "test_limbs")
 _FAULT_FILES = ("test_faults",)
+_CONTRIB_FILES = ("test_contribution",)
 
 
 def pytest_collection_modifyitems(items):
@@ -27,5 +33,8 @@ def pytest_collection_modifyitems(items):
         if any(item.fspath.purebasename.startswith(p)
                for p in _FAULT_FILES):
             item.add_marker(pytest.mark.faults)
+        if any(item.fspath.purebasename.startswith(p)
+               for p in _CONTRIB_FILES):
+            item.add_marker(pytest.mark.contribution)
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.tier1)

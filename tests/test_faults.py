@@ -212,6 +212,30 @@ def test_fault_free_report_is_empty_but_present():
     assert set(rep2.faults) == set(empty_faults_report())
     assert set(rep2.faults["quorum"]) == \
         set(empty_faults_report()["quorum"])
+    # the membership-fallout buckets are schema-stable AND distinct:
+    # graceful departures (a list of ids) never alias post-hoc
+    # evictions (a dict id -> reason) — regression for evict routing
+    # through leave, which collapsed the two
+    schema = empty_faults_report()
+    assert "departed" in schema and "evicted" in schema
+    assert schema["departed"] == [] and schema["evicted"] == {}
+
+
+def test_report_departed_vs_evicted_distinct_on_ticks():
+    """An event-driven tick's faults report files a graceful leave and
+    a post-hoc eviction under different buckets."""
+    pX, pD = _parts(P=4)
+    eng = FederationEngine(wire="gram")
+    led = FederationLedger("gram")
+    reps = eng.run_events(pX, pD, "leave@t2:p2", ledger=led)
+    assert reps[-1].faults["departed"] == [2]
+    assert reps[-1].faults["evicted"] == {}
+    led.evict(1, reason="non-finite")
+    reps2 = eng.run_events(pX, pD, "join@t4:p2", ledger=led)
+    assert reps2[-1].faults["evicted"] == {1: "non-finite"}
+    # rejoin cleared client 2's departure; eviction of 1 still stands
+    assert reps2[-1].faults["departed"] == []
+    assert 1 not in led.departed and 2 not in led.evicted
 
 
 def test_fault_determinism_same_plan_same_round():
@@ -241,11 +265,20 @@ def test_ledger_evict_bitmatches_never_joined():
         led.join(i, st_)
     led.evict(2, reason="non-finite")
     assert led.evicted == {2: "non-finite"}
+    # eviction is NOT a graceful departure: the evicted client must
+    # never land in `departed` (downstream timeline/fault accounting
+    # tells a quarantine from a deletion request by exactly this)
+    assert 2 not in led.departed
+    led.leave(1)
+    assert led.departed == {1} and 1 not in led.evicted
+    # both standing decisions still block auto-admission
+    assert set(led.seen) == {0, 1, 2, 3, 4}
     clean = FederationLedger("gram")
     for i in (0, 1, 3, 4):
         clean.join(i, stats[i])
+    clean.leave(1)
     assert _bit_equal(led.solve(), clean.solve())
-    with pytest.raises(ValueError, match="leave of client 2"):
+    with pytest.raises(ValueError, match="evict of client 2"):
         led.evict(2)                        # can't evict twice
 
 

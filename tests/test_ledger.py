@@ -273,6 +273,80 @@ def test_ledger_state_machine_errors():
     assert np.array_equal(np.asarray(led.solve()), W_before)
 
 
+def test_rejoin_clears_eviction_flag():
+    """Regression: join cleared `departed` on rejoin but left the
+    client flagged in `evicted` forever — a readmitted client must not
+    still read as quarantined in fault reports."""
+    pX, pD = _parts(P=3)
+    w = get_wire("gram")
+    led = FederationLedger(w)
+    stats = [w.local_stats(pX[i], pD[i]) for i in range(3)]
+    for i in range(3):
+        led.join(i, stats[i])
+    led.evict(1, reason="non-finite")
+    assert 1 in led.evicted
+    led.join(1, stats[1])              # operator readmits after review
+    assert 1 not in led.evicted and 1 not in led.departed
+    assert led.clients == (0, 1, 2)
+    clean = FederationLedger(w)
+    for i in range(3):
+        clean.join(i, stats[i])
+    assert np.array_equal(np.asarray(led.solve()),
+                          np.asarray(clean.solve()))
+
+
+def test_empty_federation_errors_differentiate():
+    """Regression: `global_stats()` on an empty federation said only
+    \"no clients joined\" — an all-evicted round must name the evicted
+    ids, and an all-departed one must read as departures."""
+    pX, pD = _parts(P=2)
+    w = get_wire("gram")
+    never = FederationLedger(w)
+    with pytest.raises(ValueError, match="no client ever joined"):
+        never.global_stats()
+    gone = FederationLedger(w)
+    for i in range(2):
+        gone.join(i, w.local_stats(pX[i], pD[i]))
+        gone.leave(i)
+    with pytest.raises(ValueError,
+                       match=r"every client departed.*\[0, 1\]"):
+        gone.global_stats()
+    purged = FederationLedger(w)
+    for i in range(2):
+        purged.join(i, w.local_stats(pX[i], pD[i]))
+    purged.evict(0, reason="bad-upload")
+    purged.leave(1)
+    with pytest.raises(ValueError,
+                       match=r"evicted/quorum-deferred.*evicted ids "
+                             r"\[0\].*departed ids \[1\]"):
+        purged.global_stats()
+
+
+def test_checkpoint_roundtrip_preserves_evictions(tmp_path):
+    """Standing eviction decisions (and their reasons) survive
+    save/restore; an evicted-free ledger roundtrips too (empty string
+    array edge in the npz)."""
+    pX, pD = _parts(P=4)
+    led = FederationLedger("gram")
+    w = led.wire
+    for i in range(4):
+        led.join(i, w.local_stats(pX[i], pD[i]))
+    clean_path = os.path.join(tmp_path, "clean.npz")
+    led.save(clean_path)
+    led_clean = FederationLedger.restore(clean_path)
+    assert led_clean.evicted == {} and led_clean.departed == set()
+    led.evict(2, reason="replay")
+    led.leave(3)
+    path = os.path.join(tmp_path, "evicted.npz")
+    led.save(path)
+    led2 = FederationLedger.restore(path)
+    assert led2.evicted == {2: "replay"}
+    assert led2.departed == {3}
+    assert led2.seen == (0, 1, 2, 3)   # neither flag auto-readmits
+    assert np.array_equal(np.asarray(led.solve()),
+                          np.asarray(led2.solve()))
+
+
 def test_ledger_float_path_tracks_exact_path():
     """exact=False (float merge_signed downdates) drifts only by
     rounding from the exact accumulator."""
