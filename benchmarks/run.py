@@ -28,7 +28,8 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "fig4", "table3", "scenario",
                              "fedround", "ledger", "privacy", "faults",
-                             "contribution", "kernel", "roofline"],
+                             "contribution", "obs", "kernel",
+                             "roofline"],
                     help="run a single benchmark")
     args = ap.parse_args()
 
@@ -77,6 +78,10 @@ def main():
         # same merge idiom: re-measure just the selection section
         print("== Client selection: accuracy per joule (exact LOO) ==")
         fedround_bench.run_contribution(quick=args.quick)
+    if args.only == "obs":
+        # same merge idiom: re-measure just the flight-recorder section
+        print("== Flight recorder: tracing overhead + joule split ==")
+        fedround_bench.run_obs(quick=args.quick)
     if want("kernel"):
         print("== Kernel micro-bench ==")
         kernel_bench.run()

@@ -1,0 +1,203 @@
+"""Perf-regression gate: diff BENCH_fedround.json against a baseline.
+
+Joins each BENCH section's rows on their identity keys (transport ×
+wire × P × mode for the main grid; P / flaky / K for the hierarchy,
+faults and contribution sections; the obs section is a scalar row) and
+compares the metrics that matter per row:
+
+* **deterministic** metrics (dispatches, wire/peak/retry bytes,
+  simulated joules, availability, accuracy) regress at
+  ``--threshold`` (default 25%) — these are exact functions of the
+  code, so a breach is a real behavioural regression, and the script
+  exits non-zero;
+* **timing** metrics (ΣCPU, wall, Wh, tracing overhead) regress only
+  beyond the far looser ``--timing-threshold`` (default 300%) — CI
+  boxes are noisy, so only catastrophic slowdowns gate.
+
+Rows present on one side only (the quick lane runs a smaller grid) are
+listed as added/missing, never failed. ``--update-baseline`` copies
+the current BENCH file over the baseline after review.
+
+``PYTHONPATH=src python scripts/bench_diff.py [--bench PATH]
+[--baseline PATH] [--threshold 0.25] [--timing-threshold 3.0]``
+
+ci_smoke.sh runs it after the quick bench lane; the committed baseline
+lives at ``benchmarks/baselines/BENCH_fedround.baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DEFAULT = os.path.join(REPO, "BENCH_fedround.json")
+BASELINE_DEFAULT = os.path.join(
+    REPO, "benchmarks", "baselines", "BENCH_fedround.baseline.json")
+
+# metric -> (kind, worse_direction); "up" = a higher value is worse
+METRICS = {
+    "rows": {
+        "keys": ("transport", "wire", "P", "mode"),
+        "det": {"dispatches": "up", "wire_bytes": "up", "compiles": "up"},
+        "timing": {"cpu_time": "up", "wall_s": "up", "wh": "up"},
+    },
+    "hierarchy": {
+        "keys": ("P",),
+        "det": {"peak_coordinator_bytes": "up", "bytes_tiered": "up",
+                "uplink_j_tiered": "up", "n_aggregators": "up"},
+        "timing": {"wall_s": "up", "train_time": "up"},
+    },
+    "faults": {
+        "keys": ("flaky",),
+        "det": {"availability": "down", "retries": "up",
+                "retry_bytes": "up", "retry_j": "up"},
+        "timing": {},
+    },
+    "contribution": {
+        "keys": ("K",),
+        "det": {"accuracy": "down", "selected_bytes": "up",
+                "selected_j": "up"},
+        "timing": {"score_s": "up", "wall_s": "up"},
+    },
+}
+
+# the obs section is one dict, not a row list; flatten what we gate on
+OBS_DET = {"n_events": "up"}
+OBS_TIMING = {"overhead_ratio": "up", "cpu_time_on": "up"}
+
+
+def _rows(payload: dict, section: str):
+    if section == "rows":
+        return payload.get("rows", [])
+    return (payload.get(section) or {}).get("rows", [])
+
+
+def _key(row: dict, keys) -> tuple:
+    return tuple(row.get(k) for k in keys)
+
+
+def _regression(base, cur, direction: str):
+    """Signed relative change in the *worse* direction (None = n/a)."""
+    try:
+        base, cur = float(base), float(cur)
+    except (TypeError, ValueError):
+        return None
+    if base == 0.0:
+        return None if cur == 0.0 else float("inf")
+    rel = (cur - base) / abs(base)
+    return rel if direction == "up" else -rel
+
+
+def diff(bench: dict, baseline: dict, threshold: float,
+         timing_threshold: float):
+    """Compare the two payloads; returns (table_rows, n_failures)."""
+    table, failures = [], 0
+    for section, spec in METRICS.items():
+        cur_rows = {_key(r, spec["keys"]): r
+                    for r in _rows(bench, section)}
+        base_rows = {_key(r, spec["keys"]): r
+                     for r in _rows(baseline, section)}
+        for k in sorted(base_rows.keys() - cur_rows.keys(), key=str):
+            table.append((section, k, "(row)", "-", "-", "missing", ""))
+        for k in sorted(cur_rows.keys() - base_rows.keys(), key=str):
+            table.append((section, k, "(row)", "-", "-", "new", ""))
+        for k in sorted(cur_rows.keys() & base_rows.keys(), key=str):
+            cur, base = cur_rows[k], base_rows[k]
+            for det, metrics in (("det", spec["det"]),
+                                 ("timing", spec["timing"])):
+                limit = threshold if det == "det" else timing_threshold
+                for metric, direction in metrics.items():
+                    if metric not in base or metric not in cur:
+                        continue
+                    reg = _regression(base[metric], cur[metric],
+                                      direction)
+                    if reg is None:
+                        continue
+                    bad = reg > limit
+                    failures += bad
+                    if bad or reg > limit / 2:
+                        table.append((
+                            section, k, metric, base[metric],
+                            cur[metric], f"{reg:+.1%}",
+                            "FAIL" if bad else "warn"))
+    # obs scalar section
+    co, bo = bench.get("obs") or {}, baseline.get("obs") or {}
+    if co and bo and co.get("P") == bo.get("P"):
+        for metrics, limit in ((OBS_DET, threshold),
+                               (OBS_TIMING, timing_threshold)):
+            for metric, direction in metrics.items():
+                reg = _regression(bo.get(metric), co.get(metric),
+                                  direction)
+                if reg is None:
+                    continue
+                bad = reg > limit
+                failures += bad
+                if bad or reg > limit / 2:
+                    table.append(("obs", (co.get("P"),), metric,
+                                  bo[metric], co[metric],
+                                  f"{reg:+.1%}",
+                                  "FAIL" if bad else "warn"))
+    return table, failures
+
+
+def render(table) -> str:
+    if not table:
+        return "[bench-diff] no regressions, no grid changes"
+    head = ("section", "row", "metric", "baseline", "current",
+            "delta", "")
+    rows = [head] + [tuple(str(c) for c in r) for r in table]
+    widths = [max(len(r[i]) for r in rows) for i in range(len(head))]
+    return "\n".join(
+        "  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+        for r in rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=BENCH_DEFAULT)
+    ap.add_argument("--baseline", default=BASELINE_DEFAULT)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="deterministic-metric regression gate "
+                         "(fraction; default 0.25)")
+    ap.add_argument("--timing-threshold", type=float, default=3.0,
+                    help="timing-metric regression gate (fraction; "
+                         "default 3.0 — CI timing is noisy)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy the current BENCH file over the "
+                         "baseline and exit")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.bench):
+        print(f"[bench-diff] no bench file at {args.bench} — run "
+              "PYTHONPATH=src python -m benchmarks.run --json first",
+              file=sys.stderr)
+        return 2
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.bench, args.baseline)
+        print(f"[bench-diff] baseline updated ← {args.bench}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"[bench-diff] no baseline at {args.baseline} — commit "
+              "one with --update-baseline", file=sys.stderr)
+        return 2
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    table, failures = diff(bench, baseline, args.threshold,
+                           args.timing_threshold)
+    print(render(table))
+    if failures:
+        print(f"[bench-diff] {failures} metric(s) regressed beyond "
+              "the gate", file=sys.stderr)
+        return 1
+    print("[bench-diff] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,32 @@ python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 8 \
   --wire gram --transport local --scenario none --batch-clients
 
+# the flight recorder end-to-end (DESIGN.md §14): one traced+metered
+# tiered round with injected faults; the Perfetto JSON must parse and
+# the Prometheus textfile must expose every documented metric name
+TRACE_JSON="$(mktemp -u /tmp/ci_trace_XXXX.json)"
+TRACE_PROM="$(mktemp -u /tmp/ci_metrics_XXXX.prom)"
+python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 9 \
+  --wire gram --transport local --topology "fanout=3,tiers=2" \
+  --faults "flaky=0.2,seed=0" --trace "$TRACE_JSON" \
+  --metrics "$TRACE_PROM"
+python - "$TRACE_JSON" "$TRACE_PROM" <<'PY'
+import json, sys
+from repro.obs import PROM_METRICS, SPAN_NAMES
+doc = json.load(open(sys.argv[1]))
+evs = doc["traceEvents"]
+assert evs and any(e["ph"] == "X" for e in evs), "no spans in trace"
+for e in evs:
+    if e["ph"] == "X":
+        assert e["name"] in SPAN_NAMES, e["name"]
+prom = open(sys.argv[2]).read()
+missing = [m for m in PROM_METRICS if m not in prom]
+assert not missing, f"prom textfile missing metrics: {missing}"
+print(f"trace OK ({sum(e['ph'] == 'X' for e in evs)} spans), "
+      f"prom OK ({len(PROM_METRICS)} metric names)")
+PY
+rm -f "$TRACE_JSON" "$TRACE_PROM"
+
 # the privacy subsystem end-to-end on the gram wire: masked uploads
 # (bit-exact aggregate) and one-shot DP (clip + calibrated noise)
 python -m repro.launch.fedtrain --dataset susy --scale 2e-4 --clients 6 \
@@ -223,6 +249,21 @@ for a, b in zip(fr, fr[1:]):
     assert b["cum_j"] >= a["cum_j"] and b["cum_bytes"] >= a["cum_bytes"], \
         f"frontier cost not monotone: {a} -> {b}"
     assert b["k"] > a["k"], f"frontier k not increasing: {a} -> {b}"
+# ISSUE 10 acceptance: the obs section is well-formed, the tracing-on
+# SigmaCPU stays within the 5% ceiling (the bench itself asserts this
+# before writing; re-checked here against the recorded ratio), and the
+# ledger's category split reconciles additively
+obs = d["obs"]
+need_o = {"P", "cpu_time_off", "cpu_time_on", "overhead_ratio",
+          "overhead_ceil", "n_spans", "n_events", "energy"}
+missing = need_o - set(obs)
+assert not missing, f"obs section missing {missing}"
+assert obs["overhead_ratio"] <= obs["overhead_ceil"], \
+    f"tracing overhead {obs['overhead_ratio']}x > {obs['overhead_ceil']}x"
+en = obs["energy"]
+assert abs(sum(en["by_category"].values()) - en["total_j"]) \
+    <= 1e-9 + 1e-9 * en["total_j"], "energy categories don't sum"
+assert en["by_category"]["compute"] > 0 and en["uplink_bytes"] > 0, en
 print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"ledger delta fracs {led['delta_cpu_frac']}, "
       f"secagg CPU {frac:.2f}x, fused+secagg {fused_frac:.2f}x, "
@@ -230,5 +271,9 @@ print(f"BENCH_fedround.json OK ({len(d['rows'])} rows, "
       f"availability {avail}, selection acc@K "
       f"{ {r['K']: r['accuracy'] for r in con['rows']} })")
 PY
+
+# perf-regression gate: the fresh BENCH file vs the committed baseline
+# (deterministic metrics at 25%; timings gated loosely — CI is noisy)
+python scripts/bench_diff.py
 
 echo "ci_smoke: OK"

@@ -168,7 +168,8 @@ def _accuracy(wire, W, X_eval, y_eval) -> float:
 
 def loo_scores(ledger: FederationLedger, X_eval, y_eval, *,
                lam: Optional[float] = None,
-               cost: Optional[CostModel] = None) -> ContributionReport:
+               cost: Optional[CostModel] = None,
+               tracer=None) -> ContributionReport:
     """Exact leave-one-out scores for every active ledger client.
 
     ``Δacc_i = acc(W) − acc(W_{-i})`` where ``W_{-i}`` solves over
@@ -198,6 +199,12 @@ def loo_scores(ledger: FederationLedger, X_eval, y_eval, *,
             cid=int(cid), d_acc=acc_full - acc_loo, acc_loo=acc_loo,
             upload_bytes=nbytes,
             d_joules=float(cost.comm_joules(nbytes))))
+        if tracer is not None:
+            # flight-recorder breadcrumb (obs/): the score, never the
+            # statistics it was computed from
+            tracer.event("score.client", cid=int(cid),
+                         d_acc=float(acc_full - acc_loo),
+                         d_joules=float(cost.comm_joules(nbytes)))
     return ContributionReport(acc_full=acc_full, scores=tuple(scores),
                               lam=lam)
 
@@ -366,24 +373,29 @@ def contribution_summary(report: ContributionReport,
                          score_s: float = 0.0) -> dict:
     """The stable ``RoundReport.contribution`` / BENCH dict."""
     spec = selection.spec
+    # every value coerced to a pure-Python scalar here: accuracies come
+    # off jnp.mean / np reductions as 0-d array scalars, and this dict
+    # is the RoundReport.to_dict() / BENCH JSON contract
     return {
         "mode": spec.kind,
-        "k": spec.k,
+        "k": None if spec.k is None else int(spec.k),
         "budget_j": None if spec.budget_j is None
-        else (None if math.isinf(spec.budget_j) else spec.budget_j),
-        "budget_bytes": spec.budget_bytes,
-        "acc_full": report.acc_full,
-        "scores": [{"cid": s.cid, "d_acc": s.d_acc,
-                    "acc_loo": s.acc_loo,
-                    "upload_bytes": s.upload_bytes,
-                    "d_joules": s.d_joules}
+        else (None if math.isinf(spec.budget_j)
+              else float(spec.budget_j)),
+        "budget_bytes": None if spec.budget_bytes is None
+        else int(spec.budget_bytes),
+        "acc_full": float(report.acc_full),
+        "scores": [{"cid": int(s.cid), "d_acc": float(s.d_acc),
+                    "acc_loo": float(s.acc_loo),
+                    "upload_bytes": int(s.upload_bytes),
+                    "d_joules": float(s.d_joules)}
                    for s in report.scores],
-        "order": list(selection.order),
-        "selected": list(selection.selected),
+        "order": [int(c) for c in selection.order],
+        "selected": [int(c) for c in selection.selected],
         "n_selected": len(selection.selected),
-        "spent_bytes": selection.spent_bytes,
-        "spent_j": selection.spent_j,
+        "spent_bytes": int(selection.spent_bytes),
+        "spent_j": float(selection.spent_j),
         "frontier": None if selection.frontier is None
-        else list(selection.frontier),
+        else [dict(f) for f in selection.frontier],
         "score_s": float(score_s),
     }

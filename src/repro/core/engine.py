@@ -92,6 +92,7 @@ from .util import add_bias, as_2d
 from .wire import Wire, _WireBase, get_wire
 from ..energy import EnergyMeter, watt_hours
 from ..energy.meter import J_PER_BYTE
+from ..obs.trace import NULL_TRACER
 from ..sharding import shard_map_compat
 
 TRANSPORTS = ("local", "mesh", "stream")
@@ -181,6 +182,67 @@ class RoundReport:
     def wh(self) -> float:
         return watt_hours(self.cpu_seconds)
 
+    def to_dict(self, *, include_model: bool = False) -> dict:
+        """JSON-safe rendering: every value a pure-Python type.
+
+        The nested ``faults``/``hierarchy``/``contribution``/
+        ``privacy`` dicts are built by subsystems that handle numpy
+        numbers, so :func:`_py` re-coerces recursively here — the one
+        place the whole report is guaranteed serializable
+        (round-tripped in tests/test_obs.py). ``W``/``W_first`` stay
+        out unless ``include_model``: a report is telemetry, the
+        model is a payload.
+        """
+        out = {
+            "client_times": [float(t) for t in self.client_times],
+            "coordinator_time": float(self.coordinator_time),
+            "wire_bytes": int(self.wire_bytes),
+            "roles": {
+                "on_time": [int(i) for i in self.roles.on_time],
+                "late": [int(i) for i in self.roles.late],
+                "dropped": [int(i) for i in self.roles.dropped],
+                "delays": [float(t) for t in self.roles.delays],
+            },
+            "n_samples": int(self.n_samples),
+            "cpu_seconds": float(self.cpu_seconds),
+            "rounds": int(self.rounds),
+            "dispatches": int(self.dispatches),
+            "tick": int(self.tick),
+            "changed": [int(i) for i in self.changed],
+            "privacy": _py(self.privacy),
+            "peak_coordinator_bytes": int(self.peak_coordinator_bytes),
+            "hierarchy": _py(self.hierarchy),
+            "faults": _py(self.faults),
+            "contribution": _py(self.contribution),
+            "train_time": float(self.train_time),
+            "cpu_time": float(self.cpu_time),
+            "wh": float(self.wh),
+        }
+        if include_model:
+            out["W"] = np.asarray(self.W).tolist()
+            out["W_first"] = None if self.W_first is None else \
+                np.asarray(self.W_first).tolist()
+        return out
+
+
+def _py(v):
+    """Recursively coerce numpy/JAX scalars, arrays, tuples, and dict
+    keys to pure-Python (json.dumps-clean) values. Dict keys become
+    strings — JSON objects only have string keys, so int-cid maps
+    (e.g. ``faults["quarantined"]``) must stringify for the output to
+    survive a dumps/loads round trip unchanged."""
+    if isinstance(v, dict):
+        return {str(_py(k)): _py(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_py(x) for x in v]
+    if isinstance(v, (bool, int, float, str, type(None))):
+        return v
+    if getattr(v, "ndim", None) == 0 and hasattr(v, "item"):
+        return _py(v.item())
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    return v
+
 
 class FederationEngine:
     """Single-round federated fitting over composable axes.
@@ -212,10 +274,15 @@ class FederationEngine:
                  fused: bool = False, privacy: Any = None,
                  topology: Any = None, faults: Any = None,
                  quorum: float = 1.0, journal: Optional[str] = None,
-                 select_eval: Optional[tuple] = None):
+                 select_eval: Optional[tuple] = None,
+                 trace: Any = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {TRANSPORTS})")
+        # flight recorder (obs/, DESIGN.md §14): hot paths trace
+        # unconditionally through this handle — the NULL_TRACER's
+        # span/event are constant no-ops, so tracing-off stays off
+        self.trace = trace if trace is not None else NULL_TRACER
         self.wire: Wire = get_wire(wire, act=act, backend=backend,
                                    dtype=dtype)
         self.transport = transport
@@ -326,7 +393,9 @@ class FederationEngine:
                 self._priv.prepare(next(iter(stats.values())))
             for i in list(stats):
                 t0 = time.perf_counter()
-                stats[i] = self._priv.client_encode(i, stats[i])
+                with self.trace.span("mask.encode", track="client",
+                                     cid=int(i)):
+                    stats[i] = self._priv.client_encode(i, stats[i])
                 time_by[i] = time_by.get(i, 0.0) + \
                     (time.perf_counter() - t0)
         return stats
@@ -370,6 +439,9 @@ class FederationEngine:
                     wait = plan.backoff_delay(cid, n_att)
                     fb.retry_s += wait
                     delays[cid] += wait
+                    self.trace.event("fault.retry", cid=int(cid),
+                                     attempts=int(n_att),
+                                     wait_s=float(wait))
                     if cid not in plan.crash:
                         # a crashed device transmits nothing; every
                         # other retry resends the full upload
@@ -377,9 +449,12 @@ class FederationEngine:
                             self._cw().stats_bytes(
                                 int(parts_X[cid].shape[0]), m_in, c)
                 if not ok:
-                    fb.quarantine(cid, "crash" if cid in plan.crash
-                                  else ("timeout" if cid in plan.timeout
-                                        else "flaky"))
+                    reason = "crash" if cid in plan.crash \
+                        else ("timeout" if cid in plan.timeout
+                              else "flaky")
+                    fb.quarantine(cid, reason)
+                    self.trace.event("fault.quarantine", cid=int(cid),
+                                     reason=reason)
                     continue
                 if cid in plan.corrupt:
                     st = inject_corrupt(
@@ -390,6 +465,8 @@ class FederationEngine:
                         validate_upload(cid, st, seen=seen)
                     except UploadRejected as e:
                         fb.quarantine(cid, e.reason)
+                        self.trace.event("fault.quarantine",
+                                         cid=int(cid), reason=e.reason)
                     continue
                 seen.add(cid)
                 if cid in plan.replay:
@@ -439,6 +516,10 @@ class FederationEngine:
             fb.n_deferred = len(deferred)
             fb.committed_ids = list(on_time)
             fb.deferred_ids = list(deferred)
+            self.trace.event("quorum.commit", target=float(q),
+                             frac=float(fb.committed_frac),
+                             n_committed=len(on_time),
+                             n_deferred=len(deferred))
         return ClientRoles(on_time=tuple(sorted(on_time)),
                            late=tuple(late),
                            dropped=tuple(sorted(dropped)),
@@ -490,35 +571,41 @@ class FederationEngine:
         stats, time_by, dispatches = self._phase_stats(
             parts_X, parts_d, roles.participants)
         t0 = time.perf_counter()
-        masked = priv is not None and priv.masked
-        ledger = FederationLedger(self._cw(), lam=self.lam,
-                                  act=self.wire.act)
-        for i in roles.participants:
-            ledger.join(i, stats[i])
-        report = loo_scores(ledger, X_eval, y_eval, lam=self.lam)
-        min_sel = 2 if masked else 1
-        if masked and len(roles.participants) < 2:
-            raise ValueError(
-                "selection under secagg needs >= 2 participants: a "
-                "decoded single-client aggregate would be that "
-                "client's plaintext")
-        sel = greedy_select(report, self.select, min_selected=min_sel)
-        if self.select.kind == "frontier":
-            sel = dataclasses.replace(sel, frontier=accuracy_frontier(
-                ledger, report, X_eval, y_eval, lam=self.lam,
-                min_prefix=min_sel))
-        keep = set(sel.selected)
-        # a round needs an on-time upload for its first solve: if the
-        # budget admitted only late joiners, promote the best-ranked
-        # on-time client into the cohort
-        if roles.on_time and not keep & set(roles.on_time):
-            best = next(c for c in sel.order if c in set(roles.on_time))
-            keep.add(best)
-            sel = dataclasses.replace(
-                sel, selected=tuple(sorted(keep)),
-                spent_bytes=sel.spent_bytes
-                + report.by_cid()[best].upload_bytes,
-                spent_j=sel.spent_j + report.by_cid()[best].d_joules)
+        with self.trace.span("score.pass",
+                             n_clients=len(roles.participants)):
+            masked = priv is not None and priv.masked
+            ledger = FederationLedger(self._cw(), lam=self.lam,
+                                      act=self.wire.act)
+            for i in roles.participants:
+                ledger.join(i, stats[i])
+            report = loo_scores(ledger, X_eval, y_eval, lam=self.lam,
+                                tracer=self.trace)
+            min_sel = 2 if masked else 1
+            if masked and len(roles.participants) < 2:
+                raise ValueError(
+                    "selection under secagg needs >= 2 participants: a "
+                    "decoded single-client aggregate would be that "
+                    "client's plaintext")
+            sel = greedy_select(report, self.select,
+                                min_selected=min_sel)
+            if self.select.kind == "frontier":
+                sel = dataclasses.replace(
+                    sel, frontier=accuracy_frontier(
+                        ledger, report, X_eval, y_eval, lam=self.lam,
+                        min_prefix=min_sel))
+            keep = set(sel.selected)
+            # a round needs an on-time upload for its first solve: if
+            # the budget admitted only late joiners, promote the
+            # best-ranked on-time client into the cohort
+            if roles.on_time and not keep & set(roles.on_time):
+                best = next(c for c in sel.order
+                            if c in set(roles.on_time))
+                keep.add(best)
+                sel = dataclasses.replace(
+                    sel, selected=tuple(sorted(keep)),
+                    spent_bytes=sel.spent_bytes
+                    + report.by_cid()[best].upload_bytes,
+                    spent_j=sel.spent_j + report.by_cid()[best].d_joules)
         score_s = time.perf_counter() - t0
         roles_sel = ClientRoles(
             on_time=tuple(i for i in roles.on_time if i in keep),
@@ -587,34 +674,36 @@ class FederationEngine:
                     f"client {i}: X has {nx} rows but d has {nd} — "
                     "features and targets must pair rowwise")
         self._fb = None
-        if self.topology is not None:
-            # hierarchical round: the uploading units are the client
-            # shards on EVERY transport here — under a topology the
-            # mesh axis carries sibling edge aggregators, not clients
-            self._begin_privacy(len(parts_X))
-            with EnergyMeter() as em:
-                report = self._run_hierarchical(parts_X, parts_d)
+        with self.trace.span("round", transport=self.transport,
+                             n_clients=len(parts_X),
+                             fused=self.fused) as rsp:
+            if self.topology is not None:
+                # hierarchical round: the uploading units are the
+                # client shards on EVERY transport here — under a
+                # topology the mesh axis carries sibling edge
+                # aggregators, not clients
+                self._begin_privacy(len(parts_X))
+                with EnergyMeter() as em:
+                    report = self._run_hierarchical(parts_X, parts_d)
+            else:
+                if self.transport != "mesh":
+                    # the mesh path's uploading units are the devices
+                    # on the axis, not the data partitions —
+                    # run_mesh_arrays begins its privacy run at the
+                    # axis size
+                    self._begin_privacy(len(parts_X))
+                with EnergyMeter() as em:
+                    if self.transport == "mesh":
+                        report = self._run_mesh(parts_X, parts_d)
+                    else:
+                        report = self._run_inprocess(parts_X, parts_d)
             report.cpu_seconds = em.cpu_seconds
             if self._priv is not None:
                 report.privacy = self._priv.summary()
             if self._fb is not None:
                 report.faults = self._fb.report()
-            return report
-        if self.transport != "mesh":
-            # the mesh path's uploading units are the devices on the
-            # axis, not the data partitions — run_mesh_arrays begins
-            # its privacy run at the axis size
-            self._begin_privacy(len(parts_X))
-        with EnergyMeter() as em:
-            if self.transport == "mesh":
-                report = self._run_mesh(parts_X, parts_d)
-            else:
-                report = self._run_inprocess(parts_X, parts_d)
-        report.cpu_seconds = em.cpu_seconds
-        if self._priv is not None:
-            report.privacy = self._priv.summary()
-        if self._fb is not None:
-            report.faults = self._fb.report()
+            rsp.set(wire_bytes=int(report.wire_bytes),
+                    dispatches=int(report.dispatches))
         return report
 
     def fit(self, parts_X: Sequence, parts_d: Sequence) -> jnp.ndarray:
@@ -718,11 +807,15 @@ class FederationEngine:
         schedule = timeline.schedule(P, roles=sc_roles,
                                      joined=ledger.seen,
                                      start=ledger.tick + 1)
+        ledger.tracer = self.trace
         reports = []
         for t, events in schedule:
             if t <= ledger.tick:
                 continue               # restored ledger: already applied
-            with EnergyMeter() as em:
+            with self.trace.span("round", tick=int(t),
+                                 transport=self.transport,
+                                 n_events=len(events)), \
+                    EnergyMeter() as em:
                 rep = self._run_tick(data, t, events, ledger, delta,
                                      revise_fn, sc_roles.delays)
             rep.cpu_seconds = em.cpu_seconds
@@ -756,36 +849,42 @@ class FederationEngine:
         pD = {i: data[i][1] for i in recompute}
         stats, time_by, dispatches = self._phase_stats(pX, pD, recompute)
         t0 = time.perf_counter()
-        if delta:
-            for ev in events:
-                if ev.kind == "join":
-                    ledger.join(ev.client, stats[ev.client])
-                elif ev.kind == "revise":
-                    ledger.revise(ev.client, stats[ev.client])
-                elif ev.kind == "leave":
-                    ledger.leave(ev.client)
-        else:
-            # same signed-merge algebra, but every statistic re-enters
-            # (the membership bookkeeping still goes through the
-            # persistent ledger so checkpoints stay valid)
-            for cid in recompute:
-                if cid in ledger.registry:
-                    ledger.revise(cid, stats[cid])
-                else:
-                    ledger.join(cid, stats[cid])
-            for ev in events:
-                if ev.kind == "leave":
-                    ledger.leave(ev.client)
+        with self.trace.span("ledger.apply", tick=int(t),
+                             n_events=len(events),
+                             n_changed=len(changed)):
+            if delta:
+                for ev in events:
+                    if ev.kind == "join":
+                        ledger.join(ev.client, stats[ev.client])
+                    elif ev.kind == "revise":
+                        ledger.revise(ev.client, stats[ev.client])
+                    elif ev.kind == "leave":
+                        ledger.leave(ev.client)
+            else:
+                # same signed-merge algebra, but every statistic
+                # re-enters (the membership bookkeeping still goes
+                # through the persistent ledger so checkpoints stay
+                # valid)
+                for cid in recompute:
+                    if cid in ledger.registry:
+                        ledger.revise(cid, stats[cid])
+                    else:
+                        ledger.join(cid, stats[cid])
+                for ev in events:
+                    if ev.kind == "leave":
+                        ledger.leave(ev.client)
         # the engine's λ drives the solve (a restored ledger may carry
         # an older default; its lam only backs standalone ledger.solve())
-        if self._priv is not None and self._priv.policy.dp:
-            # one release per tick: perturb a copy of the global state
-            # (the ledger itself stays noiseless) and account the spend
-            gs = self._release(ledger.global_stats(), salt=t)
-            W = ledger.wire.solve(gs, self.lam)
-            jax.block_until_ready(W)
-        else:
-            W = ledger.solve(self.lam)
+        with self.trace.span("solve", tick=int(t)):
+            if self._priv is not None and self._priv.policy.dp:
+                # one release per tick: perturb a copy of the global
+                # state (the ledger itself stays noiseless) and account
+                # the spend
+                gs = self._release(ledger.global_stats(), salt=t)
+                W = ledger.wire.solve(gs, self.lam)
+                jax.block_until_ready(W)
+            else:
+                W = ledger.solve(self.lam)
         coordinator_time = time.perf_counter() - t0
         uploaded = recompute if not delta else changed
         wire_bytes = sum(self._cw().wire_bytes(stats[i])
@@ -855,17 +954,21 @@ class FederationEngine:
         """Shared merge → (first solve →) solve tail, timed."""
         cw = self._cw()
         t0 = time.perf_counter()
-        agg = self._fold([stats[i] for i in roles.on_time])
+        with self.trace.span("merge", n_uploads=len(roles.on_time)):
+            agg = self._fold([stats[i] for i in roles.on_time])
         W_first = None
         if roles.late:
             # first solve from the on-time group — a usable model — then
             # admit the late joiners incrementally (paper §3.2)
-            W_first = cw.solve(self._release(agg, salt=1), self.lam)
-            jax.block_until_ready(W_first)
-            for i in roles.late:
-                agg = cw.merge(agg, stats[i])
-        W = cw.solve(self._release(agg, salt=0), self.lam)
-        jax.block_until_ready(W)
+            with self.trace.span("solve", first=True):
+                W_first = cw.solve(self._release(agg, salt=1), self.lam)
+                jax.block_until_ready(W_first)
+            with self.trace.span("merge", n_uploads=len(roles.late)):
+                for i in roles.late:
+                    agg = cw.merge(agg, stats[i])
+        with self.trace.span("solve"):
+            W = cw.solve(self._release(agg, salt=0), self.lam)
+            jax.block_until_ready(W)
         return W, W_first, time.perf_counter() - t0
 
     def _run_inprocess(self, parts_X, parts_d) -> RoundReport:
@@ -986,8 +1089,11 @@ class FederationEngine:
                     self._client_stats(parts_X[i0], parts_d[i0]))
             for i in idxs:
                 t0 = time.perf_counter()
-                stats[i] = self._client_stats(parts_X[i], parts_d[i])
-                jax.block_until_ready(stats[i])
+                with self.trace.span("client.stats", track="client",
+                                     cid=int(i)):
+                    stats[i] = self._client_stats(parts_X[i],
+                                                  parts_d[i])
+                    jax.block_until_ready(stats[i])
                 time_by[i] = time_by.get(i, 0.0) + \
                     (time.perf_counter() - t0)
                 dispatches += 1
@@ -999,9 +1105,11 @@ class FederationEngine:
                 # exactly zero but still count one upload, as on the loop)
                 for i in b_idxs:
                     t0 = time.perf_counter()
-                    stats[i] = self.wire.local_stats(parts_X[i],
-                                                     parts_d[i])
-                    jax.block_until_ready(stats[i])
+                    with self.trace.span("client.stats",
+                                         track="client", cid=int(i)):
+                        stats[i] = self.wire.local_stats(parts_X[i],
+                                                         parts_d[i])
+                        jax.block_until_ready(stats[i])
                     time_by[i] = time_by.get(i, 0.0) + \
                         (time.perf_counter() - t0)
                     dispatches += 1
@@ -1013,8 +1121,10 @@ class FederationEngine:
                 jax.block_until_ready(
                     self.wire.local_stats_batch(Xs, Ds, ns))
             t0 = time.perf_counter()
-            batch = self.wire.local_stats_batch(Xs, Ds, ns)
-            jax.block_until_ready(batch)
+            with self.trace.span("bucket.dispatch", bound=int(bound),
+                                 n_clients=len(b_idxs)):
+                batch = self.wire.local_stats_batch(Xs, Ds, ns)
+                jax.block_until_ready(batch)
             # a wire riding _WireBase's default batch (a per-client loop
             # over the stack) really dispatches once per client — keep
             # the dispatch metric honest for custom wires
@@ -1136,8 +1246,10 @@ class FederationEngine:
                     fn(*self._stack_bucket(parts_X, parts_d, idxs,
                                            bound)))
             t0 = time.perf_counter()
-            out = fn(Xs, Ds, ns)
-            jax.block_until_ready(out)
+            with self.trace.span("bucket.dispatch", bound=int(bound),
+                                 n_clients=len(idxs), fused=True):
+                out = fn(Xs, Ds, ns)
+                jax.block_until_ready(out)
             dispatches += 1
             self._share_times(time_by, idxs, ns,
                               time.perf_counter() - t0)
@@ -1173,22 +1285,29 @@ class FederationEngine:
             peak = sum(self.wire.wire_bytes(a)
                        for a in on_aggs + late_aggs)
             t0 = time.perf_counter()
-            agg = self.wire.merge_many(on_aggs) if on_aggs else None
-            W_first = None
-            if agg is None:
-                # every on-time shard was empty: fall back to their
-                # (zero) per-client statistics so the solve still runs
-                agg = self._fold([self.wire.local_stats(parts_X[i],
-                                                        parts_d[i])
-                                  for i in roles.on_time])
+            with self.trace.span("merge", n_uploads=len(on_aggs)):
+                agg = self.wire.merge_many(on_aggs) if on_aggs else None
+                W_first = None
+                if agg is None:
+                    # every on-time shard was empty: fall back to their
+                    # (zero) per-client statistics so the solve still
+                    # runs
+                    agg = self._fold([self.wire.local_stats(parts_X[i],
+                                                            parts_d[i])
+                                      for i in roles.on_time])
             if roles.late:
-                W_first = self.wire.solve(self._release(agg, salt=1),
-                                          self.lam)
-                jax.block_until_ready(W_first)
-                for st in late_aggs:
-                    agg = self.wire.merge(agg, st)
-            W = self.wire.solve(self._release(agg, salt=0), self.lam)
-            jax.block_until_ready(W)
+                with self.trace.span("solve", first=True):
+                    W_first = self.wire.solve(
+                        self._release(agg, salt=1), self.lam)
+                    jax.block_until_ready(W_first)
+                with self.trace.span("merge",
+                                     n_uploads=len(late_aggs)):
+                    for st in late_aggs:
+                        agg = self.wire.merge(agg, st)
+            with self.trace.span("solve"):
+                W = self.wire.solve(self._release(agg, salt=0),
+                                    self.lam)
+                jax.block_until_ready(W)
             coordinator_time = time.perf_counter() - t0
         return RoundReport(
             W=W, client_times=[time_by[i] for i in roles.participants],
@@ -1242,8 +1361,12 @@ class FederationEngine:
                         *self._stack_bucket(parts_X, parts_d, idxs,
                                             bound), pads, keys))
                 t0 = time.perf_counter()
-                out = fn(Xs, Ds, ns, pads, keys)
-                jax.block_until_ready(out)
+                with self.trace.span("bucket.dispatch",
+                                     bound=int(bound),
+                                     n_clients=len(idxs), fused=True,
+                                     masked=True):
+                    out = fn(Xs, Ds, ns, pads, keys)
+                    jax.block_until_ready(out)
             dispatches += 1
             self._share_times(time_by, idxs, ns,
                               time.perf_counter() - t0)
@@ -1258,8 +1381,10 @@ class FederationEngine:
             out = []
             for i in idxs:
                 t0 = time.perf_counter()
-                st = self.wire.local_stats(parts_X[i], parts_d[i])
-                out.append(priv.client_encode(int(i), st))
+                with self.trace.span("mask.encode", track="client",
+                                     cid=int(i), empty=True):
+                    st = self.wire.local_stats(parts_X[i], parts_d[i])
+                    out.append(priv.client_encode(int(i), st))
                 time_by[i] = time_by.get(i, 0.0) + \
                     (time.perf_counter() - t0)
                 dispatches += 1
@@ -1278,15 +1403,20 @@ class FederationEngine:
         # element) is host-resident before the fold
         peak = (len(on_aggs) + len(late_aggs)) * sess.upload_bytes
         t0 = time.perf_counter()
-        agg = cw.merge_many(on_aggs)
+        with self.trace.span("merge", n_uploads=len(on_aggs)):
+            agg = cw.merge_many(on_aggs)
         W_first = None
         if roles.late:
-            W_first = cw.solve(self._release(agg, salt=1), self.lam)
-            jax.block_until_ready(W_first)
-            for st in late_aggs:
-                agg = cw.merge(agg, st)
-        W = cw.solve(self._release(agg, salt=0), self.lam)
-        jax.block_until_ready(W)
+            with self.trace.span("solve", first=True):
+                W_first = cw.solve(self._release(agg, salt=1),
+                                   self.lam)
+                jax.block_until_ready(W_first)
+            with self.trace.span("merge", n_uploads=len(late_aggs)):
+                for st in late_aggs:
+                    agg = cw.merge(agg, st)
+        with self.trace.span("solve"):
+            W = cw.solve(self._release(agg, salt=0), self.lam)
+            jax.block_until_ready(W)
         coordinator_time = time.perf_counter() - t0
         return RoundReport(
             W=W, client_times=[time_by[i] for i in roles.participants],
@@ -1428,8 +1558,10 @@ class FederationEngine:
                 warmed.add(wk)
                 jax.block_until_ready(fn(Xs, Ds, ns))
             t0 = time.perf_counter()
-            out = fn(Xs, Ds, ns)
-            jax.block_until_ready(out)
+            with self.trace.span("collective", mode=mode,
+                                 n_groups=len(groups)):
+                out = fn(Xs, Ds, ns)
+                jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         flat_members = [i for _, m in groups for i in m]
         flat_ns = np.asarray([int(parts_X[i].shape[0])
@@ -1499,6 +1631,8 @@ class FederationEngine:
                 tree, moved = failover(tree, t_, g_)
                 fb.failed_over.append(f"tier{t_}:g{g_}")
                 fb.refolds += moved
+                self.trace.event("fault.failover", tier=int(t_),
+                                 group=int(g_), refolds=int(moved))
         journal = None
         if self.journal_path:
             if mode == "float":
@@ -1562,7 +1696,9 @@ class FederationEngine:
             nonlocal merge_s, merges
             sa, sb = size_of(acc), size_of(sub)
             t0 = time.perf_counter()
-            out = tier_add(acc, sub)
+            with self.trace.span("tier.fold", tier=int(level),
+                                 bytes=int(sa + sb)):
+                out = tier_add(acc, sub)
             merge_s += time.perf_counter() - t0
             merges += 1
             meter.pop(sa)
@@ -1593,8 +1729,12 @@ class FederationEngine:
                     jax.block_until_ready(fn(*self._stack_bucket(
                         parts_X, parts_d, b_idxs, bound), *extra))
                 t0 = time.perf_counter()
-                out = fn(Xs, Ds, ns, *extra)
-                jax.block_until_ready(out)
+                with self.trace.span("bucket.dispatch",
+                                     bound=int(bound),
+                                     n_clients=len(b_idxs),
+                                     fused=True, mode=mode):
+                    out = fn(Xs, Ds, ns, *extra)
+                    jax.block_until_ready(out)
             dispatches += 1
             self._share_times(time_by, b_idxs, ns,
                               time.perf_counter() - t0)
@@ -1615,12 +1755,14 @@ class FederationEngine:
                 jax.block_until_ready(
                     self._client_stats(parts_X[i], parts_d[i]))
             t0 = time.perf_counter()
-            st = self._client_stats(parts_X[i], parts_d[i])
-            jax.block_until_ready(st)
-            if mode == "exact":
-                st = folder.encode(st)
-            elif mode == "masked":
-                st = priv.client_encode(int(i), st)
+            with self.trace.span("client.stats", track="client",
+                                 cid=int(i), mode=mode):
+                st = self._client_stats(parts_X[i], parts_d[i])
+                jax.block_until_ready(st)
+                if mode == "exact":
+                    st = folder.encode(st)
+                elif mode == "masked":
+                    st = priv.client_encode(int(i), st)
             time_by[i] = time_by.get(i, 0.0) + \
                 (time.perf_counter() - t0)
             dispatches += 1
@@ -1691,6 +1833,8 @@ class FederationEngine:
                 if hit is not None:
                     limbs, jids = hit
                     self._fb.recovered += 1
+                    self.trace.event("fault.recovered", edge=int(e),
+                                     key=key)
                     agg = sess.from_flat(
                         np.asarray(limbs, np.int64), jids) \
                         if mode == "masked" else np.asarray(limbs)
@@ -1703,6 +1847,8 @@ class FederationEngine:
                                        ids=agg.ids)
                     else:
                         journal.commit(key, np.asarray(agg))
+                    self.trace.event("journal.commit", edge=int(e),
+                                     key=key)
                     if plan is not None and \
                             0 < plan.die <= journal.commits:
                         raise CoordinatorKilled(journal.commits,
@@ -1726,10 +1872,12 @@ class FederationEngine:
         def solve_root(agg, salt):
             nonlocal coord_s
             t0 = time.perf_counter()
-            stats = folder.decode(agg) if mode == "exact" else agg
-            wire = cw if mode == "masked" else self.wire
-            W = wire.solve(self._release(stats, salt=salt), self.lam)
-            jax.block_until_ready(W)
+            with self.trace.span("solve", first=salt == 1, mode=mode):
+                stats = folder.decode(agg) if mode == "exact" else agg
+                wire = cw if mode == "masked" else self.wire
+                W = wire.solve(self._release(stats, salt=salt),
+                               self.lam)
+                jax.block_until_ready(W)
             coord_s += time.perf_counter() - t0
             return W
 
@@ -1836,8 +1984,10 @@ class FederationEngine:
                 # per-key Gaussian is deterministic)
                 jax.block_until_ready(fn(X, D, pads, keys))
             t0 = time.perf_counter()
-            out = fn(X, D, pads, keys)
-            jax.block_until_ready(out)
+            with self.trace.span("collective", devices=int(Pn),
+                                 masked=True):
+                out = fn(X, D, pads, keys)
+                jax.block_until_ready(out)
         agg = sess.from_flat(np.asarray(out), frozenset(range(Pn)))
         W = cw.solve(self._release(agg, salt=0), lam)
         jax.block_until_ready(W)
@@ -1857,11 +2007,13 @@ class FederationEngine:
         if self.warmup:
             jax.block_until_ready(wire.local_stats(X, D))
         t0 = time.perf_counter()
-        st = wire.local_stats(X, D)
-        jax.block_until_ready(st)
-        agg = priv.client_encode(0, st)
-        W = cw.solve(self._release(agg, salt=0), lam)
-        jax.block_until_ready(W)
+        with self.trace.span("collective", devices=1, masked=True):
+            st = wire.local_stats(X, D)
+            jax.block_until_ready(st)
+            agg = priv.client_encode(0, st)
+        with self.trace.span("solve"):
+            W = cw.solve(self._release(agg, salt=0), lam)
+            jax.block_until_ready(W)
         return W, time.perf_counter() - t0
 
     def _run_mesh(self, parts_X, parts_d) -> RoundReport:
@@ -1951,10 +2103,12 @@ class FederationEngine:
             if self.warmup:
                 jax.block_until_ready(fn(X, D))
             t0 = time.perf_counter()
-            agg = fn(X, D)
-            jax.block_until_ready(agg)
-            W = wire.solve(self._release(agg, salt=0), lam)
-            jax.block_until_ready(W)
+            with self.trace.span("collective", devices=int(Pn)):
+                agg = fn(X, D)
+                jax.block_until_ready(agg)
+            with self.trace.span("solve"):
+                W = wire.solve(self._release(agg, salt=0), lam)
+                jax.block_until_ready(W)
             coordinator_time = time.perf_counter() - t0
         else:
             def shard_fn(Xs, Ds):
@@ -1971,8 +2125,9 @@ class FederationEngine:
                 # steady-state
                 jax.block_until_ready(fn(X, D))
             t0 = time.perf_counter()
-            W = fn(X, D)
-            jax.block_until_ready(W)
+            with self.trace.span("collective", devices=int(Pn)):
+                W = fn(X, D)
+                jax.block_until_ready(W)
             coordinator_time = time.perf_counter() - t0
         if roles is None:
             roles = ClientRoles(on_time=tuple(range(Pn)), late=(),

@@ -431,12 +431,15 @@ class RoundFaults:
         self.quarantined[int(cid)] = str(reason)
 
     def report(self) -> Dict[str, Any]:
+        # every value coerced to a pure-Python scalar: this dict is
+        # part of the RoundReport.to_dict() JSON contract (obs/,
+        # round-trip tested in tests/test_obs.py)
         out = empty_faults_report()
-        out["quarantined"] = {int(k): v
+        out["quarantined"] = {int(k): str(v)
                               for k, v in sorted(self.quarantined.items())}
         out["retried"] = {int(k): int(v)
                           for k, v in sorted(self.retried.items())}
-        out["failed_over"] = list(self.failed_over)
+        out["failed_over"] = [str(s) for s in self.failed_over]
         out["recovered"] = int(self.recovered)
         out["replays_rejected"] = sorted(int(c)
                                          for c in self.replays_rejected)

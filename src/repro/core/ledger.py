@@ -154,6 +154,11 @@ class FederationLedger:
             and not getattr(self.wire, "exact_by_construction", False)
         self._acc: Optional[ExactAccumulator] = None
         self._agg = None               # float aggregate / re-merge cache
+        # flight-recorder hook (obs/, DESIGN.md §14): run_events points
+        # this at the engine's tracer so membership changes land as
+        # ledger.* trace events; the default records nothing
+        from ..obs.trace import NULL_TRACER
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------ membership
     @property
@@ -190,6 +195,7 @@ class FederationLedger:
         self._validate(stats)
         self._apply(stats, +1)
         self.registry[cid] = stats
+        self.tracer.event("ledger.join", cid=int(cid))
         self.departed.discard(cid)
         # a rejoin clears BOTH standing decisions: a client that was
         # quarantined and later readmitted must not stay permanently
@@ -201,6 +207,7 @@ class FederationLedger:
             raise ValueError(f"leave of client {cid}: not active")
         self._apply(self.registry.pop(cid), -1)
         self.departed.add(cid)
+        self.tracer.event("ledger.leave", cid=int(cid))
 
     def evict(self, cid: int, reason: str = "quarantined") -> None:
         """Post-hoc quarantine: remove a client whose upload turned
@@ -218,6 +225,8 @@ class FederationLedger:
             raise ValueError(f"evict of client {cid}: not active")
         self._apply(self.registry.pop(cid), -1)
         self.evicted[int(cid)] = str(reason)
+        self.tracer.event("ledger.evict", cid=int(cid),
+                          reason=str(reason))
 
     def revise(self, cid: int, stats) -> None:
         if cid not in self.registry:
@@ -226,6 +235,7 @@ class FederationLedger:
         self._apply(self.registry[cid], -1)
         self._apply(stats, +1)
         self.registry[cid] = stats
+        self.tracer.event("ledger.revise", cid=int(cid))
 
     def _apply(self, stats, sign: int) -> None:
         self.n_events += 1

@@ -445,11 +445,17 @@ def simulate_round(tree: TierTree, topo: Topology, *,
         b["flat"] += sends * client_bytes[i]
     flat = arrive + ingest + len(client_ready) * merge_cost \
         if client_ready else None
+    # pure-Python scalars only: this dict lands verbatim in
+    # RoundReport.hierarchy and the BENCH JSON, and numpy byte counts
+    # passed in via client_bytes would otherwise propagate into the
+    # sums (JSON-safety contract, tested via RoundReport.to_dict)
     return {
-        "sim_wall_tiered": tiered, "sim_wall_flat": flat,
-        "uplink_j_tiered": j["tiered"], "uplink_j_flat": j["flat"],
-        "bytes_tiered": b["tiered"], "bytes_flat": b["flat"],
-        "retry_bytes": b["retry"], "retry_j": j["retry"],
+        "sim_wall_tiered": None if tiered is None else float(tiered),
+        "sim_wall_flat": None if flat is None else float(flat),
+        "uplink_j_tiered": float(j["tiered"]),
+        "uplink_j_flat": float(j["flat"]),
+        "bytes_tiered": int(b["tiered"]), "bytes_flat": int(b["flat"]),
+        "retry_bytes": int(b["retry"]), "retry_j": float(j["retry"]),
         "n_participants": len(client_ready),
-        "n_aggregators": tree.n_aggregators,
+        "n_aggregators": int(tree.n_aggregators),
     }

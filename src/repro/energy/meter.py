@@ -38,6 +38,17 @@ def uplink_joules(wire_bytes: int, j_per_byte: float = J_PER_BYTE) -> float:
     return float(wire_bytes) * j_per_byte
 
 
+def joules(cpu_seconds: float = 0.0, nbytes: int = 0, *,
+           watts: float = DEVICE_WATTS,
+           j_per_byte: float = J_PER_BYTE) -> float:
+    """The two-term energy model in one call: device watts × CPU
+    seconds for the compute leg, J/byte × bytes for the radio leg.
+    The attribution ledger (``obs/energy.py``) prices every slice
+    through this so compute and uplink always sum consistently with
+    :func:`watt_hours` and :func:`uplink_joules`."""
+    return watts * float(cpu_seconds) + j_per_byte * float(nbytes)
+
+
 class EnergyMeter:
     """measures process CPU time; use one per simulated participant."""
 

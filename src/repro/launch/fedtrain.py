@@ -136,6 +136,16 @@ def main():
                          'reports the accuracy-per-joule frontier; '
                          'scores are computed coordinator-side against '
                          'a validation split carved from train')
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the round's flight-recorder trace "
+                         "(obs/trace.py) and write Perfetto/Chrome-"
+                         "trace JSON here — load it at ui.perfetto.dev; "
+                         "also prints a per-phase console summary")
+    ap.add_argument("--metrics", default=None, metavar="OUT.prom",
+                    help="write a Prometheus-style textfile of the "
+                         "round's counters (dispatches, wire bytes, "
+                         "joules by category, span histograms) — "
+                         "node-exporter textfile-collector format")
     ap.add_argument("--lam", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -189,6 +199,10 @@ def main():
     policy = PrivacyPolicy(mode=args.privacy, epsilon=args.epsilon,
                            delta=args.delta, clip=args.clip,
                            seed=args.seed)
+    tracer = None
+    if args.trace or args.metrics:
+        from repro.obs import Tracer
+        tracer = Tracer()
     engine = FederationEngine(wire=args.wire, transport=args.transport,
                               scenario=scenario, act="logistic",
                               lam=args.lam, backend=args.backend,
@@ -198,7 +212,7 @@ def main():
                               topology=args.topology,
                               faults=args.faults, quorum=args.quorum,
                               journal=args.journal,
-                              select_eval=select_eval)
+                              select_eval=select_eval, trace=tracer)
     print(f"[fedtrain] {args.dataset} (scale {args.scale}): "
           f"{len(ytr)} train / {len(yte)} test, {P} clients "
           f"({scenario.partition}), wire={args.wire} "
@@ -206,6 +220,7 @@ def main():
 
     if args.timeline is not None:
         run_timeline(args, engine, Xtr, ytr, Xte, yte, P)
+        _export_trace(args, tracer, report=None)
         return
 
     try:
@@ -213,8 +228,10 @@ def main():
     except CoordinatorKilled as e:
         # injected mid-fold death (faults die=N): the journal already
         # holds every committed tier aggregate — a rerun with the same
-        # --journal resumes and finishes bit-identically
+        # --journal resumes and finishes bit-identically; the partial
+        # trace still exports (the recorder is pure observation)
         print(f"[fedtrain] {e}")
+        _export_trace(args, tracer, report=None)
         raise SystemExit(3)
     roles = report.roles
     pred = predict_labels(report.W, Xte, act="logistic")
@@ -235,6 +252,24 @@ def main():
     _print_hierarchy(report)
     _print_faults(report)
     _print_contribution(report)
+    _export_trace(args, tracer, report)
+
+
+def _export_trace(args, tracer, report):
+    """Write --trace / --metrics artefacts and the console summary."""
+    if tracer is None:
+        return
+    from repro.obs import (console_summary, write_perfetto,
+                           write_prometheus)
+    if args.trace:
+        write_perfetto(tracer, args.trace)
+        print(f"[fedtrain] trace → {args.trace} "
+              f"({len(tracer.spans)} spans, {len(tracer.events)} "
+              "events; load at ui.perfetto.dev)")
+    if args.metrics:
+        write_prometheus(tracer, args.metrics, report=report)
+        print(f"[fedtrain] metrics → {args.metrics}")
+    print(console_summary(tracer, report))
 
 
 def _print_contribution(report):

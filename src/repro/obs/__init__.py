@@ -1,0 +1,38 @@
+"""Federation flight recorder: tracing, metrics, energy attribution.
+
+See DESIGN.md §14. Entry points:
+
+* :class:`Tracer` / :data:`NULL_TRACER` — span/event recording
+  (``FederationEngine(trace=Tracer())``).
+* :class:`EnergyLedger` — compute/uplink/retry/scoring joule split.
+* :func:`write_perfetto` / :func:`write_prometheus` /
+  :func:`console_summary` — the three exporters
+  (``fedtrain --trace out.json --metrics out.prom``).
+"""
+from .energy import CATEGORIES, EnergyEntry, EnergyLedger
+from .export import (PROM_METRICS, console_summary, to_perfetto,
+                     to_prometheus, write_perfetto, write_prometheus)
+from .trace import (EVENT_NAMES, NULL_TRACER, SPAN_NAMES,
+                    SPAN_REQUIRED_FIELDS, NullTracer, Span, TraceEvent,
+                    Tracer, sanitize_attrs)
+
+__all__ = [
+    "CATEGORIES",
+    "EVENT_NAMES",
+    "EnergyEntry",
+    "EnergyLedger",
+    "NULL_TRACER",
+    "NullTracer",
+    "PROM_METRICS",
+    "SPAN_NAMES",
+    "SPAN_REQUIRED_FIELDS",
+    "Span",
+    "TraceEvent",
+    "Tracer",
+    "console_summary",
+    "sanitize_attrs",
+    "to_perfetto",
+    "to_prometheus",
+    "write_perfetto",
+    "write_prometheus",
+]

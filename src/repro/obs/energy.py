@@ -1,0 +1,213 @@
+"""Energy attribution: where did one round's joules go? (DESIGN.md §14)
+
+The paper's headline claim is measured joules for one round; credible
+green accounting needs those joules *attributed* — compute vs uplink
+vs retry vs scoring, per client and per tier — not collapsed into one
+Wh number (Green Federated Learning, arXiv:2303.14604; the uplink-vs-
+compute flip of arXiv:2206.10380). :class:`EnergyLedger` layers that
+split on ``energy/meter.py``'s two primitives (device watts × CPU
+seconds, J/byte × uplink bytes):
+
+* :meth:`EnergyLedger.from_report` — post-hoc attribution of a
+  finished :class:`~..core.engine.RoundReport`: per-client compute
+  from ``client_times``, coordinator compute, uplink from
+  ``wire_bytes`` (tiered rounds use the per-link simulated joules),
+  retry surcharge from the faults ledger, scoring from the
+  contribution pass. The category sums reconcile with the report's
+  own totals to within float rounding (tested), so BENCH sections and
+  EXPERIMENTS tables read the ledger instead of hand-assembling.
+* :meth:`EnergyLedger.from_trace` — span-level attribution of a
+  :class:`~.trace.Tracer` record: per-tier compute from ``tier.fold``
+  spans, per-bucket client compute, mask/encode overhead.
+
+Scopes are strings: ``client:<cid>``, ``tier:<level>``,
+``coordinator``, ``fleet`` (uplink legs not attributable to a single
+client from the report alone).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..energy.meter import DEVICE_WATTS, J_PER_BYTE
+from ..energy.meter import joules as _joules
+
+__all__ = ["CATEGORIES", "EnergyEntry", "EnergyLedger"]
+
+CATEGORIES = ("compute", "uplink", "retry", "scoring")
+
+
+@dataclasses.dataclass
+class EnergyEntry:
+    """One attributed slice of a round's energy."""
+    category: str                 # one of CATEGORIES
+    scope: str                    # "client:3" | "tier:1" | "coordinator"
+    seconds: float = 0.0          # CPU seconds (compute-side legs)
+    nbytes: int = 0               # uplink bytes (radio-side legs)
+    joules: float = 0.0
+
+
+class EnergyLedger:
+    """Additive per-(category, scope) joule accounting."""
+
+    def __init__(self, *, watts: float = DEVICE_WATTS,
+                 j_per_byte: float = J_PER_BYTE):
+        self.watts = float(watts)
+        self.j_per_byte = float(j_per_byte)
+        self._entries: Dict[tuple, EnergyEntry] = {}
+
+    def add(self, category: str, scope: str, *, seconds: float = 0.0,
+            nbytes: int = 0, joules: Optional[float] = None) -> None:
+        """Attribute one slice. ``joules`` defaults to the meter
+        model: watts × seconds + J/byte × bytes; pass it explicitly
+        when a better-priced number exists (e.g. the tiered link
+        simulation's per-link joules)."""
+        if category not in CATEGORIES:
+            raise ValueError(
+                f"unknown energy category {category!r} "
+                f"(expected one of {CATEGORIES})")
+        if joules is None:
+            joules = _joules(seconds, nbytes, watts=self.watts,
+                             j_per_byte=self.j_per_byte)
+        key = (category, scope)
+        ent = self._entries.get(key)
+        if ent is None:
+            ent = self._entries[key] = EnergyEntry(category, scope)
+        ent.seconds += float(seconds)
+        ent.nbytes += int(nbytes)
+        ent.joules += float(joules)
+
+    # ------------------------------------------------------- aggregation
+    @property
+    def entries(self):
+        return list(self._entries.values())
+
+    def total_j(self) -> float:
+        return sum(e.joules for e in self._entries.values())
+
+    def by_category(self) -> Dict[str, float]:
+        out = {c: 0.0 for c in CATEGORIES}
+        for e in self._entries.values():
+            out[e.category] += e.joules
+        return out
+
+    def _by_scope_prefix(self, prefix: str) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        for e in self._entries.values():
+            if not e.scope.startswith(prefix):
+                continue
+            d = out.setdefault(e.scope, {c: 0.0 for c in CATEGORIES})
+            d[e.category] += e.joules
+        return out
+
+    def by_client(self) -> Dict[str, dict]:
+        return self._by_scope_prefix("client:")
+
+    def by_tier(self) -> Dict[str, dict]:
+        return self._by_scope_prefix("tier:")
+
+    def seconds(self, category: Optional[str] = None) -> float:
+        return sum(e.seconds for e in self._entries.values()
+                   if category is None or e.category == category)
+
+    def bytes(self, category: Optional[str] = None) -> int:
+        return sum(e.nbytes for e in self._entries.values()
+                   if category is None or e.category == category)
+
+    def summary(self) -> dict:
+        """Pure-Python (JSON-safe) rendering of the attribution."""
+        return {
+            "watts": self.watts,
+            "j_per_byte": self.j_per_byte,
+            "total_j": float(self.total_j()),
+            "by_category": {k: float(v)
+                            for k, v in self.by_category().items()},
+            "compute_s": float(self.seconds("compute")),
+            "scoring_s": float(self.seconds("scoring")),
+            "uplink_bytes": int(self.bytes("uplink")),
+            "retry_bytes": int(self.bytes("retry")),
+            "by_client": {k: {c: float(j) for c, j in d.items()}
+                          for k, d in sorted(self.by_client().items())},
+            "by_tier": {k: {c: float(j) for c, j in d.items()}
+                        for k, d in sorted(self.by_tier().items())},
+        }
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def from_report(cls, report, *, watts: float = DEVICE_WATTS,
+                    j_per_byte: float = J_PER_BYTE) -> "EnergyLedger":
+        """Attribute a finished round's energy from its report alone.
+
+        Reconciliation contract (tested): ``seconds("compute") +
+        seconds("scoring")`` equals ``report.cpu_time`` plus the
+        unselected clients' ``contribution["scoring_client_s"]``
+        (energy they really burned, though ``client_times`` only
+        covers committed participants), and ``bytes("uplink")``
+        equals ``report.wire_bytes`` (tiered rounds:
+        ``hierarchy["bytes_tiered"]``) to within float rounding; the
+        retry leg equals the faults ledger's.
+        """
+        led = cls(watts=watts, j_per_byte=j_per_byte)
+        # -- compute: per participating client, then the coordinator
+        for cid, t in zip(report.roles.participants,
+                          report.client_times):
+            led.add("compute", f"client:{int(cid)}", seconds=float(t))
+        contribution = report.contribution or {}
+        score_s = float(contribution.get("score_s", 0.0))
+        scoring_client_s = float(
+            contribution.get("scoring_client_s", 0.0))
+        # the scoring pass is coordinator work folded into
+        # coordinator_time; unselected clients' measured compute lives
+        # only in contribution["scoring_client_s"]
+        led.add("compute", "coordinator",
+                seconds=float(report.coordinator_time) - score_s)
+        if score_s:
+            led.add("scoring", "coordinator", seconds=score_s)
+        if scoring_client_s:
+            led.add("scoring", "fleet", seconds=scoring_client_s)
+        # -- uplink: the tiered round's per-link simulation already
+        # priced LAN/WAN legs; flat rounds ride the J/byte model
+        hier = report.hierarchy or {}
+        if hier:
+            led.add("uplink", "fleet",
+                    nbytes=int(hier["bytes_tiered"]),
+                    joules=float(hier["uplink_j_tiered"]))
+        else:
+            led.add("uplink", "fleet", nbytes=int(report.wire_bytes))
+        # -- retry surcharge (already included in neither leg above:
+        # wire_bytes counts admitted uploads once; the fault ledger
+        # prices the duplicates)
+        faults = report.faults or {}
+        if faults.get("retry_bytes"):
+            led.add("retry", "fleet",
+                    nbytes=int(faults["retry_bytes"]),
+                    joules=float(faults["retry_j"]))
+        return led
+
+    @classmethod
+    def from_trace(cls, tracer, *, watts: float = DEVICE_WATTS,
+                   j_per_byte: float = J_PER_BYTE) -> "EnergyLedger":
+        """Span-level attribution: per-tier and per-bucket compute.
+
+        Uses each span's measured process-CPU time; only *leaf* work
+        spans are charged (``tier.fold``/``solve``/``merge`` on the
+        coordinator, ``client.stats``/``bucket.dispatch``/
+        ``mask.encode``/``collective`` on the client side), so nested
+        ``round`` spans never double-count.
+        """
+        led = cls(watts=watts, j_per_byte=j_per_byte)
+        for sp in getattr(tracer, "spans", ()):
+            a = sp.attrs
+            if sp.name == "tier.fold":
+                led.add("compute", f"tier:{int(a.get('tier', 0))}",
+                        seconds=sp.cpu_s)
+            elif sp.name in ("client.stats", "mask.encode"):
+                scope = f"client:{a['cid']}" if "cid" in a else "fleet"
+                led.add("compute", scope, seconds=sp.cpu_s)
+            elif sp.name in ("bucket.dispatch", "collective"):
+                led.add("compute", "fleet", seconds=sp.cpu_s)
+            elif sp.name in ("merge", "solve", "ledger.apply"):
+                led.add("compute", "coordinator", seconds=sp.cpu_s)
+            elif sp.name == "score.pass":
+                led.add("scoring", "coordinator", seconds=sp.cpu_s)
+        return led

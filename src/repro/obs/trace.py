@@ -1,0 +1,310 @@
+"""Federation flight recorder: typed spans and events (DESIGN.md §14).
+
+A :class:`Tracer` records what one federated round actually did —
+phase by phase, client by client, tier by tier — as a flat list of
+**spans** (named intervals with wall time, process-CPU time, and
+scalar attributes such as byte counts) and **events** (named instants:
+fault injections, ledger membership changes, quorum decisions,
+journal commits). Exporters (``obs/export.py``) render the same
+record three ways: Perfetto/Chrome-trace JSON, a Prometheus-style
+textfile, and a console round summary.
+
+Two invariants shape the design:
+
+* **Zero overhead when off.** The engine threads an unconditional
+  ``with self.trace.span(...)`` through every hot path; when no
+  tracer is attached it holds the module-level :data:`NULL_TRACER`,
+  whose ``span``/``event`` are constant no-ops (a shared context
+  manager object, no allocation, no clock reads). Tracing never
+  touches arrays, RNG state, or dispatch structure, so a traced round
+  returns the bit-identical ``W`` and dispatch counts of an untraced
+  one (tested in tests/test_obs.py).
+
+* **Sizes and timings, never statistics.** Span/event attributes are
+  restricted to scalars (bool/int/float/str) and *short* sequences of
+  them — :func:`sanitize_attrs` raises ``TypeError`` on any array
+  (numpy or JAX) or long sequence, so a client's Gram/SVD payload can
+  never leak into the trace stream by construction. The secagg spy
+  test asserts it: a traced masked round's exported trace carries no
+  statistic value.
+
+Span and event names are a closed taxonomy (:data:`SPAN_NAMES`,
+:data:`EVENT_NAMES`) so exporters and dashboards can't drift silently
+— the golden-schema test pins both sets plus each span's required
+fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = [
+    "EVENT_NAMES",
+    "NULL_TRACER",
+    "NullTracer",
+    "SPAN_NAMES",
+    "Span",
+    "TraceEvent",
+    "Tracer",
+    "sanitize_attrs",
+]
+
+# ------------------------------------------------------------ taxonomy
+# The closed span vocabulary: round → client-phase → bucket-dispatch →
+# mask/encode → tier-fold → solve → commit. Adding a name here is an
+# exporter-schema change — update DESIGN.md §14 and the golden test.
+SPAN_NAMES = (
+    "round",            # one engine run (or one ledger tick)
+    "client.stats",     # one client's local statistics pass
+    "bucket.dispatch",  # one fleet-batched/fused bucket program
+    "mask.encode",      # client-side privacy step (clip/noise/mask)
+    "collective",       # the mesh transport's sharded round program
+    "tier.fold",        # one tier merge of the hierarchical fold
+    "merge",            # flat coordinator fold over uploads
+    "solve",            # coordinator solve (W or W_first)
+    "score.pass",       # the contribution-scoring client phase
+    "ledger.apply",     # applying one tick's events to the ledger
+)
+
+# Instantaneous events: bookkeeping decisions, not work.
+EVENT_NAMES = (
+    "fault.retry",        # a client's upload was retried
+    "fault.quarantine",   # a client's upload was rejected pre-fold
+    "fault.failover",     # a tier aggregator failed over to a sibling
+    "fault.recovered",    # an edge aggregate recovered from the WAL
+    "quorum.commit",      # the round committed at a sample quorum
+    "journal.commit",     # one edge aggregate became durable
+    "ledger.join",        # membership events (event-driven rounds)
+    "ledger.leave",
+    "ledger.revise",
+    "ledger.evict",
+    "score.client",       # one client's exact-LOO score
+)
+
+# Fields every exported span carries (the golden-schema contract).
+SPAN_REQUIRED_FIELDS = ("name", "track", "t0", "dur_s", "cpu_s")
+
+_SCALARS = (bool, int, float, str, type(None))
+_MAX_SEQ = 16
+
+
+def _scalar(v: Any) -> Any:
+    """One attribute value → a pure-Python scalar, or TypeError."""
+    if isinstance(v, _SCALARS):
+        return v
+    # numpy scalars quack like item(); arrays/jax arrays have shape —
+    # any value with a nonzero ndim is a payload, not an attribute
+    if getattr(v, "ndim", None) == 0 and hasattr(v, "item"):
+        return _scalar(v.item())
+    raise TypeError(
+        f"trace attribute of type {type(v).__name__} is not a scalar: "
+        "spans carry sizes and timings, never statistics payloads "
+        "(DESIGN.md §14)")
+
+
+def sanitize_attrs(attrs: Dict[str, Any]) -> Dict[str, Any]:
+    """Coerce span/event attributes to pure-Python scalars.
+
+    Allows scalars and short (≤16) lists/tuples of scalars; anything
+    array-like raises ``TypeError`` — the structural guarantee behind
+    the trace stream's privacy stance (a Gram block physically cannot
+    ride an attribute).
+    """
+    out = {}
+    for k, v in attrs.items():
+        if isinstance(v, (list, tuple)):
+            if len(v) > _MAX_SEQ:
+                raise TypeError(
+                    f"trace attribute {k!r} is a length-{len(v)} "
+                    f"sequence (max {_MAX_SEQ}): aggregate it to a "
+                    "count instead of shipping a payload")
+            out[k] = [_scalar(x) for x in v]
+        else:
+            out[k] = _scalar(v)
+    return out
+
+
+# ------------------------------------------------------------- records
+@dataclasses.dataclass
+class Span:
+    """One named interval of round work."""
+    name: str
+    track: str                    # timeline row: "client" | "coordinator"
+    t0: float                     # wall clock at entry (perf_counter s)
+    dur_s: float = 0.0            # wall duration
+    cpu_s: float = 0.0            # process-CPU time inside the span
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    depth: int = 0                # nesting depth at entry (same track)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "track": self.track,
+                "t0": float(self.t0), "dur_s": float(self.dur_s),
+                "cpu_s": float(self.cpu_s), "depth": int(self.depth),
+                "attrs": dict(self.attrs)}
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One named instant (a decision, not work)."""
+    name: str
+    track: str
+    t: float
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "track": self.track,
+                "t": float(self.t), "attrs": dict(self.attrs)}
+
+
+class _SpanCtx:
+    """Reusable-per-call context manager closing one span."""
+
+    __slots__ = ("_tracer", "_span", "_cpu0")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self._span = span
+
+    def __enter__(self) -> "_SpanCtx":
+        self._cpu0 = time.process_time()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        sp = self._span
+        tr = self._tracer
+        sp.cpu_s = time.process_time() - self._cpu0
+        # t0 is origin-relative; subtract on the same clock basis
+        sp.dur_s = (time.perf_counter() - tr.t_origin) - sp.t0
+        tr._depth[sp.track] = max(0, tr._depth.get(sp.track, 1) - 1)
+        return False
+
+    # mid-span attribute attachment (e.g. byte counts known only after
+    # the dispatch returns) — sanitized like constructor attrs
+    def set(self, **attrs) -> None:
+        self._span.attrs.update(sanitize_attrs(attrs))
+
+
+class Tracer:
+    """Collects spans/events for one or more federated rounds.
+
+    ``strict=True`` (default) rejects span/event names outside the
+    taxonomy — exporters rely on the closed vocabulary. All wall
+    clocks are ``time.perf_counter`` relative to the tracer's birth
+    (``t_origin``), so exported timestamps start near zero.
+    """
+
+    enabled = True
+
+    def __init__(self, *, strict: bool = True):
+        self.strict = bool(strict)
+        self.t_origin = time.perf_counter()
+        self.spans: List[Span] = []
+        self.events: List[TraceEvent] = []
+        self.counters: Dict[Tuple[str, ...], float] = {}
+        self._depth: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ spans
+    def span(self, name: str, track: str = "coordinator",
+             **attrs) -> _SpanCtx:
+        if self.strict and name not in SPAN_NAMES:
+            raise ValueError(
+                f"unknown span name {name!r} (taxonomy: {SPAN_NAMES})")
+        depth = self._depth.get(track, 0)
+        self._depth[track] = depth + 1
+        sp = Span(name=name, track=track,
+                  t0=time.perf_counter() - self.t_origin,
+                  attrs=sanitize_attrs(attrs), depth=depth)
+        self.spans.append(sp)
+        return _SpanCtx(self, sp)
+
+    def event(self, name: str, track: str = "coordinator",
+              **attrs) -> TraceEvent:
+        if self.strict and name not in EVENT_NAMES:
+            raise ValueError(
+                f"unknown event name {name!r} (taxonomy: {EVENT_NAMES})")
+        ev = TraceEvent(name=name, track=track,
+                        t=time.perf_counter() - self.t_origin,
+                        attrs=sanitize_attrs(attrs))
+        self.events.append(ev)
+        return ev
+
+    def count(self, metric: str, value: float = 1.0, **labels) -> None:
+        """Bump a named counter (rendered by the Prometheus exporter)."""
+        key = (metric,) + tuple(f"{k}={_scalar(v)}"
+                                for k, v in sorted(labels.items()))
+        self.counters[key] = self.counters.get(key, 0.0) + float(value)
+
+    # ------------------------------------------------------- inspection
+    def spans_named(self, name: str) -> List[Span]:
+        return [s for s in self.spans if s.name == name]
+
+    def events_named(self, name: str) -> List[TraceEvent]:
+        return [e for e in self.events if e.name == name]
+
+    def total_cpu_s(self, name: Optional[str] = None) -> float:
+        return sum(s.cpu_s for s in self.spans
+                   if name is None or s.name == name)
+
+    def clear(self) -> None:
+        self.spans.clear()
+        self.events.clear()
+        self.counters.clear()
+        self._depth.clear()
+        self.t_origin = time.perf_counter()
+
+
+class _NullCtx:
+    """The shared no-op span context (NULL_TRACER's only allocation)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **attrs) -> None:
+        pass
+
+
+_NULL_CTX = _NullCtx()
+
+
+class NullTracer:
+    """Tracing off: every call is a constant no-op.
+
+    The engine holds this when no tracer is attached, so hot paths
+    never branch on ``if tracer is not None`` — the off cost is one
+    attribute lookup and an empty ``with``.
+    """
+
+    enabled = False
+    spans: tuple = ()
+    events: tuple = ()
+    counters: dict = {}
+
+    def span(self, name: str, track: str = "coordinator", **attrs):
+        return _NULL_CTX
+
+    def event(self, name: str, track: str = "coordinator", **attrs):
+        return None
+
+    def count(self, metric: str, value: float = 1.0, **labels) -> None:
+        pass
+
+    def spans_named(self, name):
+        return []
+
+    def events_named(self, name):
+        return []
+
+    def total_cpu_s(self, name=None) -> float:
+        return 0.0
+
+    def clear(self) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()

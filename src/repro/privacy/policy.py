@@ -529,15 +529,23 @@ class PrivacyRun:
 
     # --------------------------------------------------------- summary
     def summary(self) -> dict:
-        out = {"mode": self.policy.mode, "clip": self.policy.clip,
-               "epsilon": self.policy.epsilon, "delta": self.policy.delta,
-               "releases": self.accountant.releases,
-               "eps_spent": self.accountant.eps_spent,
-               "delta_spent": self.accountant.delta_spent,
-               "sigma": self._sigma, "sensitivity": self._sens}
+        # pure-Python scalars only: this dict is RoundReport.privacy,
+        # part of the to_dict() JSON contract (obs/) — σ/sensitivity
+        # come off jnp reductions as 0-d array scalars otherwise
+        def _f(v):
+            return None if v is None else float(v)
+
+        out = {"mode": self.policy.mode, "clip": _f(self.policy.clip),
+               "epsilon": _f(self.policy.epsilon),
+               "delta": _f(self.policy.delta),
+               "releases": int(self.accountant.releases),
+               "eps_spent": _f(self.accountant.eps_spent),
+               "delta_spent": _f(self.accountant.delta_spent),
+               "sigma": _f(self._sigma), "sensitivity": _f(self._sens)}
         if self.policy.dp and self.policy.secagg:
-            out["noise_share_basis"] = self.cohort or self.n_clients
+            out["noise_share_basis"] = int(self.cohort
+                                           or self.n_clients)
         if self.masked and self.session._treedef is not None:
-            out["upload_bytes"] = self.session.upload_bytes
-            out["mod_bits"] = self.session.mod_bits
+            out["upload_bytes"] = int(self.session.upload_bytes)
+            out["mod_bits"] = int(self.session.mod_bits)
         return out

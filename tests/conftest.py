@@ -17,12 +17,17 @@ quarantine, quorum commit, failover, journaled resume) the same way.
 (DESIGN.md §13: exact LOO scores, exact Shapley, budget-greedy
 selection) the same way — tier-1 by default, since exactness
 regressions there are correctness regressions.
+
+``obs`` groups the observability suite (DESIGN.md §14: flight-recorder
+tracing, exporters, energy attribution, tracing-off bit-identity) —
+tier-1 by default, since the off path must never perturb results.
 """
 import pytest
 
 _PRIVACY_FILES = ("test_privacy", "test_privacy_matrix", "test_limbs")
 _FAULT_FILES = ("test_faults",)
 _CONTRIB_FILES = ("test_contribution",)
+_OBS_FILES = ("test_obs",)
 
 
 def pytest_collection_modifyitems(items):
@@ -36,5 +41,8 @@ def pytest_collection_modifyitems(items):
         if any(item.fspath.purebasename.startswith(p)
                for p in _CONTRIB_FILES):
             item.add_marker(pytest.mark.contribution)
+        if any(item.fspath.purebasename.startswith(p)
+               for p in _OBS_FILES):
+            item.add_marker(pytest.mark.obs)
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.tier1)
